@@ -1,0 +1,78 @@
+"""Table II reproduction: TOPS/W of Accel_1 (N-MNIST) and Accel_2
+(CIFAR10-DVS) from the calibrated energy model driven by the cycle-level
+dispatch simulator.
+
+Flow = Algorithm 1: train (short, synthetic stand-in datasets) -> L1 prune
+-> 8-bit quantize -> ILP map -> execute -> energy report.
+For speed the SNN is trained briefly; energy depends on spike statistics,
+not accuracy, and the synthetic sets match the paper's activity contrast
+(CIFAR10-DVS busier than N-MNIST).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.menage_paper import (CIFAR_DATA, CIFAR_SNN, NMNIST_DATA,
+                                        NMNIST_SNN)
+from repro.core.accelerator import map_model, run
+from repro.core.energy import ACCEL_1, ACCEL_2
+from repro.core.prune import prune_pytree
+from repro.core.quant import quantize_pytree
+from repro.data.events import event_batches, synthetic_event_dataset
+from repro.snn.mlp import train_snn
+
+
+def _prepare(data_cfg, snn_cfg, train_steps: int, key):
+    spikes, labels = synthetic_event_dataset(data_cfg, n_per_class=8, key=key)
+    it = event_batches(spikes, labels, batch=16)
+    params, _ = train_snn(key, snn_cfg, it, steps=train_steps, lr=1e-3)
+    pruned, _ = prune_pytree(params, 0.5)
+    _, dq = quantize_pytree(pruned)
+    return [np.asarray(w) for w in dq], spikes
+
+
+def measure(spec, data_cfg, snn_cfg, n_images: int = 4,
+            train_steps: int = 30, seed: int = 0):
+    key = jax.random.key(seed)
+    weights, spikes = _prepare(data_cfg, snn_cfg, train_steps, key)
+    model = map_model(weights, spec, lif=snn_cfg.lif)
+    reports = []
+    for i in range(n_images):
+        res = run(model, spikes[i])
+        reports.append(res.energy)
+    tops_w = float(np.mean([r.tops_per_w for r in reports]))
+    util = float(np.mean([r.utilization for r in reports]))
+    ops = int(np.mean([r.total_ops for r in reports]))
+    return {"accel": spec.name, "tops_per_w": tops_w, "utilization": util,
+            "ops_per_image": ops,
+            "rounds_per_layer": [len(l.rounds) for l in model.layers]}
+
+
+def main(fast: bool = True):
+    t0 = time.monotonic()
+    rows = []
+    # NOTE: CIFAR10-DVS synthetic stand-in is spatially downsampled (DESIGN.md
+    # §5) so the CPU-hosted simulation finishes; activity statistics are
+    # preserved, layer widths are the paper's.
+    r1 = measure(ACCEL_1, NMNIST_DATA, NMNIST_SNN,
+                 n_images=2 if fast else 8)
+    rows.append(r1)
+    r2 = measure(ACCEL_2, CIFAR_DATA, CIFAR_SNN,
+                 n_images=1 if fast else 4, train_steps=15)
+    rows.append(r2)
+    paper = {"Accel1": 3.4, "Accel2": 12.1}
+    for r in rows:
+        target = paper[r["accel"]]
+        print(f"energy/{r['accel']},{r['tops_per_w']:.3f},"
+              f"paper={target},util={r['utilization']:.3f},"
+              f"ops={r['ops_per_image']}")
+    print(f"energy,elapsed,{time.monotonic()-t0:.1f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,56 @@
+"""Pallas kernel microbenchmarks.
+
+CPU-interpret timings are NOT TPU performance — the derived column reports
+the structural quantities that matter on the target (bytes moved per call,
+arithmetic intensity, event-sparsity speedup factor)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # event_synapse: sparsity-proportional work
+    n_src, n_dest = 1024, 1024
+    w = jnp.asarray(rng.normal(size=(n_src, n_dest)).astype(np.float32))
+    for density in (0.05, 0.25):
+        spikes = jnp.asarray((rng.random((4, n_src)) < density)
+                             .astype(np.float32))
+        max_ev = max(int(density * n_src * 2), 16)
+        ev = ops.events_from_spikes(spikes, max_ev)
+        us = _timeit(ops.event_synapse, ev, w)
+        # derived: fraction of dense bytes touched (events/n_src)
+        frac = float((np.asarray(ev) >= 0).mean() * max_ev / n_src)
+        print(f"kernel/event_synapse_d{density},{us:.0f},"
+              f"dense_byte_frac={max_ev/n_src:.3f}")
+    # lif_update: fused vs unfused byte traffic
+    v = jnp.asarray(rng.normal(size=(64, 4096)).astype(np.float32))
+    i = jnp.asarray(rng.normal(size=(64, 4096)).astype(np.float32))
+    us = _timeit(lambda a, b: ops.lif_update(a, b)[0], v, i)
+    print(f"kernel/lif_update,{us:.0f},fused_hbm_bytes={4*v.size*4}")
+    # c2c_matmul: int8 weights halve weight traffic vs bf16
+    x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
+    wq = jnp.asarray(rng.integers(-127, 128, (1024, 1024)).astype(np.int8))
+    us = _timeit(ops.c2c_matmul, x, wq, jnp.float32(0.01))
+    ai = 2 * 256 * 1024 * 1024 / (x.nbytes + wq.nbytes + 256 * 1024 * 4)
+    print(f"kernel/c2c_matmul,{us:.0f},arith_intensity={ai:.0f}")
+
+
+if __name__ == "__main__":
+    main()

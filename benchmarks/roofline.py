@@ -1,0 +1,117 @@
+"""§Roofline: read the dry-run JSONs and emit the per-(arch x shape) table —
+three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and a
+one-line lever per cell."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import PEAK_FLOPS_BF16
+
+
+def count_params(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from the config arithmetic."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    v = cfg.vocab_size
+    if cfg.family == "ssm":
+        d_in = cfg.ssm_expand * d
+        h = d_in // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        per = d * (2 * d_in + 2 * n + h) + cfg.ssm_conv_width * d_in \
+            + d_in * d + 3 * h + d_in + d
+        total = cfg.n_layers * per + 2 * v * d
+        return total, total
+    attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * d
+    if cfg.n_experts:
+        ff_total = cfg.n_experts * 3 * d * cfg.d_ff + d * cfg.n_experts
+        ff_active = cfg.top_k * 3 * d * cfg.d_ff + d * cfg.n_experts
+    else:
+        ff_total = ff_active = 3 * d * cfg.d_ff
+    if cfg.family == "encdec":
+        enc = cfg.n_encoder_layers * (attn + 2 * d * cfg.d_ff)
+        dec = cfg.n_layers * (2 * attn + 2 * d * cfg.d_ff)
+        total = enc + dec + v * d
+        return total, total
+    if cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * d
+        h = d_in // cfg.ssm_head_dim
+        per_ssm = d * (2 * d_in + 2 * cfg.ssm_state + h) \
+            + cfg.ssm_conv_width * d_in + d_in * d
+        shared = attn + ff_total
+        total = cfg.n_layers * per_ssm + shared + 2 * v * d
+        return total, total
+    per_layer = attn + ff_total
+    per_active = attn + ff_active
+    total = cfg.n_layers * per_layer + 2 * v * d
+    active = cfg.n_layers * per_active + 2 * v * d
+    return total, active
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    total, active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+def load_table(out_dir: str = "results/dryrun", tag: str = "pod",
+               suffix: str = "") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, tag, f"*{suffix}.json"))):
+        base = os.path.basename(path)[:-5]
+        if suffix and not base.endswith(suffix):
+            continue
+        if not suffix and ("_sp_" in base or base.endswith("_sp")
+                           or "_opt" in base):
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        r = rec["roofline"]
+        arch, shape = rec["arch"], rec["shape"]
+        mf = model_flops_for(arch, shape)
+        n_dev = r["n_devices"]
+        hlo_total = r["hlo_flops"] * n_dev
+        rows.append({
+            "arch": arch, "shape": shape, "kind": rec["kind"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "model_flops": mf, "hlo_flops_total": hlo_total,
+            "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+            "step_s": r["step_time_s"],
+            "mfu_bound": (mf / n_dev / PEAK_FLOPS_BF16) / r["step_time_s"]
+            if r["step_time_s"] else 0.0,
+        })
+    return rows
+
+
+def main():
+    # canonical = the optimized framework's sweep; fall back to the baseline
+    # sweep dir if final results are absent
+    out_dir = "results/final" if os.path.isdir("results/final/pod") \
+        else "results/dryrun"
+    rows = load_table(out_dir)
+    print("roofline: arch,shape,compute_ms,memory_ms,collective_ms,dominant,"
+          "useful_ratio,mfu_bound")
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']},"
+              f"{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
+              f"{r['collective_s']*1e3:.2f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['mfu_bound']:.3f}")
+    # dry-run coverage summary (deliverable e): both production meshes
+    for tag in ("pod", "multipod"):
+        n = len(glob.glob(os.path.join(out_dir, tag, "*.json")))
+        print(f"dryrun/{tag},cells={n},expected=34")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark driver — one section per paper table/figure + the roofline
+report.  Prints ``name,value,derived`` CSV lines (see each module)."""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import accuracy, energy, kernels_bench, mapping_bench, memory_util
+    sections = [
+        ("accuracy (Table I)", accuracy.main),
+        ("energy (Table II)", lambda: energy.main(fast=False)),
+        ("memory utilization (Figs 6-7)", memory_util.main),
+        ("ILP mapping (SIII-D)", mapping_bench.main),
+        ("Pallas kernels", kernels_bench.main),
+    ]
+    try:
+        from benchmarks import roofline
+        sections.append(("roofline (dry-run)", roofline.main))
+    except Exception:
+        pass
+
+    failures = 0
+    for name, fn in sections:
+        print(f"# --- {name} ---")
+        t0 = time.monotonic()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"# {name}: {time.monotonic()-t0:.1f}s")
+    if failures:
+        sys.exit(f"{failures} benchmark sections failed")
+
+
+if __name__ == "__main__":
+    main()

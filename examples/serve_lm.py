@@ -1,0 +1,76 @@
+"""Serving example: prefill + batched decode with KV cache on any assigned
+architecture (reduced config), including the SWA ring buffer and — on a
+multi-device mesh — sequence-parallel flash-decoding.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch mixtral_8x7b --tokens 32
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.models.transformer import (transformer_decode_step,
+                                      transformer_prefill)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    assert cfg.family in ("dense", "moe", "vlm"), \
+        "this example drives the decoder-only serving path"
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.key(0), dtype=jnp.bfloat16)
+
+    total = args.prompt_len + args.tokens
+    prompt = jax.random.randint(jax.random.key(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+
+    # prefill
+    t0 = time.perf_counter()
+    logits, cache = jax.jit(
+        lambda p, t: transformer_prefill(p, cfg, t))(params, prompt)
+    jax.block_until_ready(logits)
+    print(f"prefill({args.prompt_len} toks x {args.batch}): "
+          f"{(time.perf_counter()-t0)*1e3:.0f} ms")
+
+    # grow self-cache to the full horizon (ring buffer archs keep window size)
+    clen = min(cfg.window, total) if cfg.window else total
+    pad = clen - cache["k"].shape[3]
+    if pad > 0:
+        cache = {k: jnp.pad(v, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+                 for k, v in cache.items()}
+    elif pad < 0:
+        cache = {k: v[:, :, :, :clen] for k, v in cache.items()}
+
+    decode = jax.jit(lambda p, c, t, pos: transformer_decode_step(
+        p, cfg, c, t, pos))
+    toks = jnp.argmax(logits, axis=-1)
+    out = [toks]
+    t0 = time.perf_counter()
+    for i in range(args.tokens - 1):
+        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
+        logits, cache = decode(params, cache, toks, pos)
+        toks = jnp.argmax(logits, axis=-1)
+        out.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    seq = np.stack([np.asarray(t) for t in out], axis=1)
+    print(f"decoded {args.tokens-1} steps x {args.batch} seqs in "
+          f"{dt*1e3:.0f} ms ({dt/(args.tokens-1)*1e3:.1f} ms/step)")
+    print(f"sample continuation (batch 0): {seq[0][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

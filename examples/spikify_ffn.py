@@ -1,0 +1,46 @@
+"""MENAGE-style event-driven execution of a transformer FFN block.
+
+Demonstrates DESIGN.md §Arch-applicability: the paper's "work ∝ spikes"
+proposition applied to a conventional layer — the ReLU activations of an
+FFN are rate-encoded and pushed through the event_synapse Pallas kernel, so
+weight-traffic scales with activation sparsity instead of the dense n_in.
+
+  PYTHONPATH=src python examples/spikify_ffn.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spikify import spikified_linear
+
+
+def main():
+    rng = np.random.default_rng(0)
+    d_model, d_ff, batch = 256, 1024, 8
+    w_in = jnp.asarray(rng.normal(size=(d_model, d_ff)).astype(np.float32)
+                       / np.sqrt(d_model))
+    w_out = jnp.asarray(rng.normal(size=(d_ff, d_model)).astype(np.float32)
+                        / np.sqrt(d_ff))
+    x = jnp.asarray(rng.normal(size=(batch, d_model)).astype(np.float32))
+
+    # dense reference FFN
+    h = jax.nn.relu(x @ w_in)
+    y_ref = np.asarray(h @ w_out)
+    sparsity = float((h == 0).mean())
+    print(f"FFN {d_model}->{d_ff}->{d_model}; ReLU sparsity {sparsity:.1%}")
+
+    for t in (16, 64, 256):
+        y, stats = spikified_linear(jax.random.key(1), h, w_out, num_steps=t)
+        err = float(np.abs(np.asarray(y) - y_ref).mean()
+                    / np.abs(y_ref).mean())
+        print(f"T={t:4d}: rel err {err:6.3f}, "
+              f"event fraction {float(stats['event_fraction']):.3f} "
+              f"(weight-row traffic vs dense)")
+
+    print("-> error falls ~1/sqrt(T); traffic tracks activation sparsity —")
+    print("   the paper's event-driven energy story, MXU-native.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""End-to-end LM training driver: train a ~100M-param dense transformer for
+a few hundred steps on the synthetic token pipeline, with the production
+training loop (checkpoint/restart, straggler detection, optional gradient
+compression) on whatever devices exist.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200 [--compress]
+  # multi-device (emulated):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/train_lm.py --steps 50 --mesh 4,2
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.data.tokens import TokenPipelineConfig, token_batch
+from repro.engine.train_loop import (TrainLoopConfig, init_train_state,
+                                     make_train_step, resume_or_init,
+                                     train_loop)
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compress import CompressionConfig
+from repro.parallel.sharding import TRAIN_RULES, activate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--size", choices=["tiny", "100m"], default="tiny",
+                    help="'100m' is the deliverable config (use on real "
+                         "accelerators); 'tiny' smoke-runs the same driver "
+                         "on CPU")
+    ap.add_argument("--mesh", default="1,1")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.size == "100m":
+        # ~100M params: 12L x 768 (GPT-2-small-ish) with GQA
+        cfg = ArchConfig(name="lm100m", family="dense", n_layers=12,
+                         d_model=768, n_heads=12, n_kv_heads=4, d_ff=3072,
+                         vocab_size=32000, head_dim=64)
+    else:
+        cfg = ArchConfig(name="lm-tiny", family="dense", n_layers=2,
+                         d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+                         vocab_size=2048, head_dim=32)
+    bundle = build_model(cfg)
+    data_cfg = TokenPipelineConfig(vocab_size=cfg.vocab_size,
+                                   seq_len=args.seq,
+                                   global_batch=args.batch)
+
+    dm, mm = (int(x) for x in args.mesh.split(","))
+    mesh = jax.make_mesh((dm, mm), ("data", "model"))
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=50)
+    comp = CompressionConfig(enabled=args.compress)
+
+    with activate(mesh, TRAIN_RULES):
+        params = bundle.init(jax.random.key(0))
+        n = sum(p.size for p in jax.tree.leaves(params))
+        print(f"model: {n/1e6:.1f}M params on mesh {mesh.devices.shape}")
+        state = init_train_state(None, params, opt_cfg, comp).as_tree()
+        step_fn = jax.jit(make_train_step(bundle.loss, opt_cfg, comp),
+                          donate_argnums=(0,))
+        loop_cfg = TrainLoopConfig(steps=args.steps, checkpoint_every=100,
+                                   checkpoint_dir=args.ckpt, log_every=20)
+        state, start = resume_or_init(loop_cfg, state)
+        if start:
+            print(f"resumed from step {start}")
+
+        def batch_fn(step):
+            b = token_batch(data_cfg, step)
+            return {"tokens": jnp.asarray(b["tokens"])}
+
+        state, hist = train_loop(state, step_fn, batch_fn, loop_cfg,
+                                 start_step=start)
+    print(f"done: loss {hist['loss'][0]:.3f} -> {hist['loss'][-1]:.3f}, "
+          f"{hist['stragglers']} straggler events, "
+          f"checkpoints at {hist['checkpoints']}")
+
+
+if __name__ == "__main__":
+    main()

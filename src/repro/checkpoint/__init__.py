@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import (CheckpointManager, latest_step,  # noqa: F401
+                                      restore_checkpoint, save_checkpoint)

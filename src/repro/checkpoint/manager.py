@@ -1,0 +1,131 @@
+"""Fault-tolerant checkpointing.
+
+Design (mirrors what Orbax does at scale, self-contained here):
+  * atomic commit: write to ``step_<n>.tmp/``, fsync, rename to ``step_<n>/``
+    — a preempted writer never corrupts the latest checkpoint;
+  * async: a background thread serializes device arrays (snapshot taken
+    synchronously via ``jax.device_get``, write overlapped with compute);
+  * sharding-agnostic restore: arrays are stored logically (whole-array npz);
+    restore places them under ANY target sharding/mesh — this is what makes
+    **elastic restart** (resume on a different device count / mesh shape)
+    work, tested in tests/test_checkpoint.py;
+  * step-keyed data pipeline (data/tokens.py derives batches from (seed,
+    step)), so resume is exactly-once without saving reader state.
+
+At real multi-pod scale the npz-per-host writes become per-shard OCDBT
+writes; the manager interface (save/restore/latest_step/wait) is unchanged.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, step: int, tree, extra: dict | None = None):
+    """Synchronous atomic save."""
+    tmp = os.path.join(path, f"step_{step:08d}.tmp")
+    final = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"a{i}": a for i, a in enumerate(host)})
+    meta = {"step": step, "n_leaves": len(host),
+            "treedef": str(treedef), "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for d in os.listdir(path):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(path, d, "meta.json")):
+                steps.append(int(d[5:]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, step: int, tree_like,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``; if ``shardings`` (same
+    pytree of NamedSharding) is given, place shards accordingly — works for
+    any mesh, enabling elastic restart across different device counts."""
+    d = os.path.join(path, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves, treedef = _flatten(tree_like)
+    arrs = [data[f"a{i}"] for i in range(len(leaves))]
+    if shardings is not None:
+        shard_leaves = jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "mesh"))
+        out = [jax.device_put(a, s) for a, s in zip(arrs, shard_leaves)]
+    else:
+        out = [jax.device_put(a) for a in arrs]
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Async checkpoint writer with bounded retention."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        os.makedirs(path, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save_async(self, step: int, tree, extra: dict | None = None):
+        self.wait()
+        # snapshot on the calling thread (cheap host copy), write in background
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        snapshot = jax.tree.unflatten(treedef, host)
+
+        def work():
+            try:
+                save_checkpoint(self.path, step, snapshot, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(d[5:]) for d in os.listdir(self.path)
+            if d.startswith("step_") and not d.endswith(".tmp")
+            and os.path.exists(os.path.join(self.path, d, "meta.json")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def latest(self) -> int | None:
+        self.wait()
+        return latest_step(self.path)

@@ -1,0 +1,24 @@
+"""The paper's own configurations (§IV-A): two SNN models x two accelerator
+design points."""
+
+from repro.core.energy import ACCEL_1, ACCEL_2  # noqa: F401
+from repro.core.lif import LIFParams
+from repro.data.events import EventDatasetConfig
+from repro.snn.mlp import SNNConfig
+
+# N-MNIST: 200/100/40/10 MLP on Accel_1 (4 cores, M=10, N=16, 400 KB/core)
+NMNIST_DATA = EventDatasetConfig.nmnist_like()
+NMNIST_SNN = SNNConfig(layer_sizes=(NMNIST_DATA.n_in, 200, 100, 40, 10),
+                       lif=LIFParams(beta=0.9, threshold=1.0),
+                       num_steps=25)
+
+# CIFAR10-DVS: 1000/500/200/100/10 MLP on Accel_2 (5 cores, M=20, N=32, 20 MB)
+CIFAR_DATA = EventDatasetConfig.cifar10_dvs_like()
+CIFAR_SNN = SNNConfig(layer_sizes=(CIFAR_DATA.n_in, 1000, 500, 200, 100, 10),
+                      lif=LIFParams(beta=0.9, threshold=1.0),
+                      num_steps=25)
+
+TRAIN_PARAMS = {  # Table I
+    "nmnist": {"lr": 1e-3, "epochs": 50, "prune": "l1", "quant_bits": 8},
+    "cifar10_dvs": {"lr": 1e-3, "epochs": 100, "prune": "l1", "quant_bits": 8},
+}

@@ -1,0 +1,18 @@
+"""MENAGE core: the paper's contribution as composable JAX modules.
+
+Layers:
+  lif          — discrete-time LIF + surrogate gradient (A-NEURON math)
+  quant        — 8-bit symmetric quantization + ideal C2C ladder model
+  prune        — unstructured L1 pruning
+  mapping      — the ILP (eqs. 3-7): exact HiGHS solvers, max-flow fast path, greedy
+  memories     — MEM_E / MEM_E2A / MEM_S&N bit-level model + dispatch simulator
+  energy       — calibrated Table-II energy model
+  accelerator  — end-to-end software twin (map_model / run / reference_forward)
+  noise        — analog non-ideality perturbations
+"""
+
+from repro.core.lif import LIFParams, lif_step, lif_rollout, rate_encode, spike_fn  # noqa: F401
+from repro.core.quant import QuantizedTensor, quantize_symmetric, c2c_ladder_value  # noqa: F401
+from repro.core.prune import l1_prune_mask, prune_pytree, sparsity  # noqa: F401
+from repro.core.energy import ACCEL_1, ACCEL_2, AcceleratorSpec, energy_model  # noqa: F401
+from repro.core.accelerator import map_model, run, reference_forward  # noqa: F401

@@ -1,0 +1,188 @@
+"""End-to-end MENAGE accelerator simulation (paper Fig. 1 + Algorithm 1).
+
+A MENAGE instance is a chain of MX-NEURACOREs, one per model layer.  Mapping
+a trained+pruned+quantized SNN onto an :class:`AcceleratorSpec` produces, per
+layer: an ILP mapping solution, the three control memories, and the A-SYN
+weight SRAM.  ``run`` then executes a spike train through the chain with the
+cycle-level dispatch simulator driving discrete-time LIF virtual neurons —
+the software twin of the silicon.
+
+Correctness contract (tested): the accelerator simulation's output spike
+counts equal the pure-JAX reference SNN's (same LIF params, same quantized
+weights) for every neuron the ILP assigned, and the ILP assigns all neurons
+whenever capacity M*N >= layer width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.energy import AcceleratorSpec, EnergyReport, energy_model
+from repro.core.lif import LIFParams
+from repro.core.mapping import MappingProblem, MappingSolution, solve_mapping
+from repro.core.memories import (DispatchStats, MemTables,
+                                 build_event_memories, dispatch_simulate,
+                                 mem_sn_utilization)
+from repro.core.quant import quantize_symmetric
+
+
+@dataclasses.dataclass
+class MappedRound:
+    """One capacitor-assignment round (§III-D: once a neuron's connections
+    are processed its capacitor is reassigned — layers wider than M*N run in
+    ceil(n_dest / M*N) sequential rounds, each with its own ILP solve)."""
+
+    neuron_ids: np.ndarray     # global dest indices handled this round
+    mapping: MappingSolution   # indices local to neuron_ids
+    tables: MemTables
+
+
+@dataclasses.dataclass
+class MappedLayer:
+    w_q: np.ndarray            # dequantized int8 weights actually on the SRAM
+    rounds: list[MappedRound]
+    n_src: int
+    n_dest: int
+
+    @property
+    def mapping(self) -> MappingSolution:  # convenience: first round
+        return self.rounds[0].mapping
+
+    @property
+    def tables(self) -> MemTables:
+        return self.rounds[0].tables
+
+    @property
+    def n_assigned(self) -> int:
+        return sum(r.mapping.n_assigned for r in self.rounds)
+
+
+@dataclasses.dataclass
+class MappedModel:
+    spec: AcceleratorSpec
+    layers: list[MappedLayer]
+    lif: LIFParams
+
+
+def map_model(weights: list[np.ndarray], spec: AcceleratorSpec,
+              lif: LIFParams = LIFParams(), quant_bits: int = 8,
+              fanout: int | None = None,
+              method: str = "auto") -> MappedModel:
+    """Algorithm 1 steps 3-5: quantize, ILP-map, build config memories.
+
+    weights: list of (n_in, n_out) pruned float matrices (one per layer).
+    Each layer must fit one MX-NEURACORE: n_out <= M*N and
+    nbytes(w != 0) <= weight_mem_bytes.
+    """
+    assert len(weights) <= spec.n_cores, \
+        f"model has {len(weights)} layers but {spec.name} has {spec.n_cores} cores"
+    layers = []
+    for li, w in enumerate(weights):
+        n_src, n_dest = w.shape
+        nz_bytes = int((w != 0).sum())  # 8-bit weights -> 1 byte per synapse
+        assert nz_bytes <= spec.weight_mem_bytes, \
+            f"layer {li}: {nz_bytes} B of weights > {spec.weight_mem_bytes} B SRAM"
+        qt = quantize_symmetric(np.asarray(w), bits=quant_bits)
+        w_q = np.asarray(qt.dequantize()) * (np.asarray(w) != 0)
+        # multi-round ILP: solve, peel off assigned neurons, re-solve on the
+        # remainder (capacitor reassignment, §III-D)
+        remaining = np.arange(n_dest)
+        rounds: list[MappedRound] = []
+        while len(remaining):
+            w_sub = w_q[:, remaining]
+            prob = MappingProblem.from_weights(w_sub, spec.n_engines,
+                                               spec.n_caps, fanout=fanout)
+            sol = solve_mapping(prob, method=method)
+            sol.check(prob)
+            if sol.n_assigned == 0:
+                raise AssertionError(
+                    f"layer {li}: ILP cannot assign any of the remaining "
+                    f"{len(remaining)} neurons (fan-out too tight)")
+            tables = build_event_memories(w_sub, sol, spec.n_engines,
+                                          spec.n_caps)
+            rounds.append(MappedRound(neuron_ids=remaining.copy(),
+                                      mapping=sol, tables=tables))
+            remaining = remaining[sol.engine < 0]
+        layers.append(MappedLayer(w_q=w_q, rounds=rounds,
+                                  n_src=n_src, n_dest=n_dest))
+    return MappedModel(spec=spec, layers=layers, lif=lif)
+
+
+@dataclasses.dataclass
+class RunResult:
+    out_spikes: np.ndarray                 # [T, n_out]
+    per_layer_stats: list[DispatchStats]
+    per_layer_util: list[np.ndarray]       # MEM_S&N utilization per step
+    energy: EnergyReport
+
+
+def run(model: MappedModel, in_spikes: np.ndarray,
+        sn_capacity_rows: int | None = None,
+        frame_cycles: int | None = "default") -> RunResult:
+    """Execute a spike train [T, n_in] through the MX-NEURACORE chain.
+    Rounds within a layer execute sequentially (their cycles add); their
+    currents target disjoint neuron subsets."""
+    p = model.lif
+    spikes = np.asarray(in_spikes, dtype=np.float32)
+    stats_all, util_all = [], []
+    for layer in model.layers:
+        t_steps = spikes.shape[0]
+        currents = np.zeros((t_steps, layer.n_dest), dtype=np.float32)
+        agg_stats = None
+        total_rows = sum(r.tables.n_rows for r in layer.rounds)
+        util = np.zeros(t_steps)
+        for rnd in layer.rounds:
+            cur_sub, stats = dispatch_simulate(rnd.tables, spikes,
+                                               len(rnd.neuron_ids))
+            assigned = rnd.mapping.engine >= 0
+            currents[:, rnd.neuron_ids[assigned]] += cur_sub[:, assigned]
+            if agg_stats is None:
+                agg_stats = stats
+            else:
+                agg_stats = DispatchStats(
+                    cycles=agg_stats.cycles + stats.cycles,
+                    rows_touched=agg_stats.rows_touched + stats.rows_touched,
+                    engine_ops=agg_stats.engine_ops + stats.engine_ops,
+                    events=agg_stats.events,  # same event stream
+                    sn_bytes_touched=(agg_stats.sn_bytes_touched
+                                      + stats.sn_bytes_touched),
+                    mem_e_peak=max(agg_stats.mem_e_peak, stats.mem_e_peak))
+            cap_rows = sn_capacity_rows or max(total_rows, 1)
+            util += mem_sn_utilization(rnd.tables, spikes, cap_rows)
+        # discrete-time LIF over the layer's neurons
+        v = np.zeros(layer.n_dest, dtype=np.float32)
+        out = np.zeros_like(currents)
+        for t in range(t_steps):
+            v = p.beta * v + currents[t]
+            fired = v >= p.threshold
+            out[t] = fired.astype(np.float32)
+            v = np.where(fired, p.v_reset, v)
+        util_all.append(util)
+        stats_all.append(agg_stats)
+        spikes = out
+    if frame_cycles == "default":
+        energy = energy_model(model.spec, stats_all)
+    else:
+        energy = energy_model(model.spec, stats_all,
+                              frame_cycles=frame_cycles)
+    return RunResult(out_spikes=spikes, per_layer_stats=stats_all,
+                     per_layer_util=util_all, energy=energy)
+
+
+def reference_forward(weights: list[np.ndarray], lif: LIFParams,
+                      in_spikes: np.ndarray) -> np.ndarray:
+    """Pure dense reference: same math, no event machinery (the oracle)."""
+    spikes = np.asarray(in_spikes, dtype=np.float32)
+    for w in weights:
+        currents = spikes @ np.asarray(w, dtype=np.float32)
+        v = np.zeros(w.shape[1], dtype=np.float32)
+        out = np.zeros_like(currents)
+        for t in range(currents.shape[0]):
+            v = lif.beta * v + currents[t]
+            fired = v >= lif.threshold
+            out[t] = fired.astype(np.float32)
+            v = np.where(fired, lif.v_reset, v)
+        spikes = out
+    return spikes

@@ -1,0 +1,145 @@
+"""Analytical energy/performance model of MENAGE (paper §IV-B, Table II).
+
+No silicon in this container: HSpice/Design-Compiler numbers enter as model
+constants, and the model is calibrated so the two paper design points land at
+their reported efficiencies:
+
+  Accel_1 (4 cores, M=10 A-NEURON x N=16 virt, 400 KB/core, N-MNIST)     -> 3.4 TOPS/W
+  Accel_2 (5 cores, M=20 A-NEURON x N=32 virt,  20 MB/core, CIFAR10-DVS) -> 12.1 TOPS/W
+
+Anchored constants from the paper:
+  * A-NEURON power 97 nW, delay 6.72 ns  (=> ~0.65 fJ per neuron update)
+  * system clock 103.2 MHz
+  * 1 synaptic MAC = 2 ops (TOPS counting convention)
+
+Free (calibrated) constants, documented in EXPERIMENTS.md:
+  * E_MAC        — dynamic energy per synaptic MAC through the A-SYN C2C
+                   ladder + SRAM weight read (charge-domain MAC @ 90 nm)
+  * E_CTRL_ROW   — controller energy per MEM_S&N row dispatch (digital)
+  * P_LEAK_MB    — SRAM leakage per MB (dominates Accel_2's big 20 MB arrays)
+  * P_CTRL       — per-core controller static+clock power
+
+The *shape* of the model (utilization-dependent efficiency: higher spike
+activity amortizes static power, which is why the bigger Accel_2 running the
+busier CIFAR10-DVS wins) is the paper's qualitative story; the constants are
+fit to Table II.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.memories import DispatchStats
+
+# ---- anchored constants (paper §IV-B) -------------------------------------
+P_ANEURON_W = 97e-9          # 97 nW per active A-NEURON
+T_ANEURON_S = 6.72e-9        # A-NEURON delay
+F_CLK_HZ = 103.2e6           # system clock
+OPS_PER_MAC = 2
+
+# ---- calibrated constants (fit to Table II, see benchmarks/energy.py) -----
+E_MAC_J = 30e-15             # per-MAC dynamic energy (A-SYN C2C + SRAM read)
+E_CTRL_ROW_J = 200e-15       # per-MEM_S&N-row controller dispatch energy
+P_LEAK_PER_MB_W = 0.0        # folded into P_CTRL_CORE_W by calibration
+P_CTRL_CORE_W = 39.4e-6      # per-core controller static + clock tree
+FRAME_CYCLES = 4700          # sensor frame period (~45.5 us @ 103.2 MHz);
+                             # solved so Accel_1/Accel_2 land on Table II
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorSpec:
+    """A MENAGE design point (paper §IV-A)."""
+
+    name: str
+    n_cores: int              # MX-NEURACOREs (chained, one per layer)
+    n_engines: int            # M  A-NEURONs per core
+    n_caps: int               # N  virtual neurons per A-NEURON
+    weight_mem_bytes: int     # per-core weight memory
+
+    @property
+    def total_mem_mb(self) -> float:
+        return self.n_cores * self.weight_mem_bytes / 2**20
+
+    @property
+    def peak_ops_per_s(self) -> float:
+        """All engines doing one MAC per clock."""
+        return self.n_cores * self.n_engines * F_CLK_HZ * OPS_PER_MAC
+
+
+ACCEL_1 = AcceleratorSpec("Accel1", n_cores=4, n_engines=10, n_caps=16,
+                          weight_mem_bytes=400 * 1024)
+ACCEL_2 = AcceleratorSpec("Accel2", n_cores=5, n_engines=20, n_caps=32,
+                          weight_mem_bytes=20 * 1024 * 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    name: str
+    total_ops: int
+    wall_time_s: float
+    dynamic_j: float
+    static_j: float
+    tops_per_w: float
+    utilization: float
+    breakdown: dict
+
+
+def energy_model(spec: AcceleratorSpec,
+                 per_core_stats: list[DispatchStats],
+                 frame_cycles: int | None = FRAME_CYCLES) -> EnergyReport:
+    """Aggregate per-core dispatch statistics into Table-II-style numbers.
+
+    per_core_stats: one DispatchStats per MX-NEURACORE (layer).  Cores run
+    pipelined; wall time is set by the slowest core's cycle count.
+
+    ``frame_cycles`` models real-time event-driven edge operation: the
+    sensor delivers one spike frame every ``frame_cycles`` clock cycles, so
+    a core that finishes dispatching early IDLES (static power still burns)
+    until the next frame.  This is what makes the sparse N-MNIST workload
+    less efficient than the busy CIFAR10-DVS one on the *larger* Accel_2 —
+    the paper's Table II contrast.  ``None`` = throughput mode (no idle).
+    """
+    assert len(per_core_stats) <= spec.n_cores
+    total_macs = sum(int(s.engine_ops.sum()) for s in per_core_stats)
+    total_rows = sum(int(s.rows_touched.sum()) for s in per_core_stats)
+    total_ops = total_macs * OPS_PER_MAC
+    if frame_cycles is None:
+        slowest_cycles = max(int(s.cycles.sum()) for s in per_core_stats)
+    else:
+        # per time step: max(dispatch cycles, frame period) on the slowest core
+        slowest_cycles = max(
+            int(np.maximum(s.cycles, frame_cycles).sum())
+            for s in per_core_stats)
+    wall_time = max(slowest_cycles, 1) / F_CLK_HZ
+
+    e_mac = total_macs * E_MAC_J
+    e_rows = total_rows * E_CTRL_ROW_J
+    # A-NEURON active energy: one update per MAC landing on it
+    e_neuron = total_macs * P_ANEURON_W * T_ANEURON_S
+    dynamic = e_mac + e_rows + e_neuron
+
+    p_static = (spec.n_cores * P_CTRL_CORE_W
+                + spec.total_mem_mb * P_LEAK_PER_MB_W)
+    static = p_static * wall_time
+
+    total_j = dynamic + static
+    tops_w = (total_ops / total_j) / 1e12 if total_j > 0 else 0.0
+    peak_ops = spec.peak_ops_per_s * wall_time
+    return EnergyReport(
+        name=spec.name,
+        total_ops=total_ops,
+        wall_time_s=wall_time,
+        dynamic_j=dynamic,
+        static_j=static,
+        tops_per_w=tops_w,
+        utilization=total_ops / max(peak_ops, 1e-30),
+        breakdown={
+            "E_mac_J": e_mac,
+            "E_ctrl_rows_J": e_rows,
+            "E_aneuron_J": e_neuron,
+            "E_static_J": static,
+            "P_static_W": p_static,
+        },
+    )

@@ -1,0 +1,110 @@
+"""Leaky integrate-and-fire neuron dynamics (paper §III-A, eq. (1)).
+
+The A-NEURON emulates discrete-time LIF clocked by the system clock:
+
+    tau_m dV/dt = -V + R_m I    →    V[t+1] = alpha * V[t] + (1-alpha) R_m I[t]
+
+with ``alpha = exp(-dt/tau_m)`` (exact ZOH discretization) or the paper's
+simpler per-step capacitive-discharge form ``V[t+1] = beta * V[t] + I[t]``
+(snntorch-style ``Leaky``), which is what the hardware's controller-commanded
+discharge implements.  We use the snntorch form as the default so that the
+software model matches the silicon behaviour the paper simulates.
+
+Firing: ``S[t] = 1[V[t] >= theta]``; reset-to-``V_reset`` (hard reset), as in
+§III-A ("the membrane potential is reset to V_reset").
+
+Training uses a fast-sigmoid surrogate gradient (Eshraghian et al., the
+paper's SNNTorch reference [31]).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Static LIF cell parameters (shared by a layer)."""
+
+    beta: float = 0.9          # membrane decay per time step (capacitor discharge)
+    threshold: float = 1.0     # V_th
+    v_reset: float = 0.0       # reset potential
+    surrogate_slope: float = 25.0  # fast-sigmoid slope k
+
+
+@jax.custom_vjp
+def spike_fn(v: jax.Array, threshold: float, slope: float) -> jax.Array:
+    """Heaviside spike with fast-sigmoid surrogate gradient.
+
+    forward:  S = 1[v >= threshold]
+    backward: dS/dv ≈ 1 / (1 + k|v - threshold|)^2
+    """
+    return (v >= threshold).astype(v.dtype)
+
+
+def _spike_fwd(v, threshold, slope):
+    return spike_fn(v, threshold, slope), (v, threshold, slope)
+
+
+def _spike_bwd(res, g):
+    v, threshold, slope = res
+    x = slope * (v - threshold)
+    surr = 1.0 / (1.0 + jnp.abs(x)) ** 2
+    return (g * surr * slope, None, None)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step(v: jax.Array, current: jax.Array, p: LIFParams):
+    """One clock edge of the A-NEURON: integrate, fire, reset, leak.
+
+    Order matches the hardware: the stored capacitor voltage is restored,
+    the synaptic charge is accumulated, the comparator fires, and the
+    controller commands the discharge (leak) for the next step.
+
+    Returns ``(v_next, spikes)``.
+    """
+    v_integrated = p.beta * v + current
+    spikes = spike_fn(v_integrated, p.threshold, p.surrogate_slope)
+    v_next = jnp.where(spikes > 0, p.v_reset, v_integrated)
+    return v_next, spikes
+
+
+def lif_rollout(currents: jax.Array, p: LIFParams, v0: jax.Array | None = None):
+    """Run LIF over a time-major current sequence ``currents[T, ...]``.
+
+    Returns ``(spikes[T, ...], v_trace[T, ...])``.
+    """
+    if v0 is None:
+        v0 = jnp.zeros_like(currents[0])
+
+    def body(v, i):
+        v_next, s = lif_step(v, i, p)
+        return v_next, (s, v_next)
+
+    _, (spikes, vtrace) = jax.lax.scan(body, v0, currents)
+    return spikes, vtrace
+
+
+def rate_encode(x: jax.Array, num_steps: int, key: jax.Array) -> jax.Array:
+    """Rate-based spike encoding (the accelerator's supported encoding).
+
+    ``x`` in [0, 1]; returns Bernoulli spike trains ``[num_steps, *x.shape]``.
+    """
+    keys = jax.random.split(key, num_steps)
+
+    def one(k):
+        return (jax.random.uniform(k, x.shape) < x).astype(jnp.float32)
+
+    return jax.vmap(one)(keys)
+
+
+@partial(jax.jit, static_argnames=("num_steps",))
+def spike_count_decode(spikes: jax.Array, num_steps: int) -> jax.Array:
+    """Rate decode: spike counts over the window (used for classification)."""
+    return spikes.sum(axis=0) / num_steps

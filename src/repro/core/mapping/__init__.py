@@ -1,0 +1,10 @@
+from repro.core.mapping.ilp import (  # noqa: F401
+    MappingProblem,
+    MappingSolution,
+    solve_mapping,
+    solve_mapping_full_ilp,
+    solve_mapping_reduced_ilp,
+    solve_mapping_greedy,
+    solve_mapping_bruteforce,
+)
+from repro.core.mapping.maxflow import max_flow_assignment  # noqa: F401

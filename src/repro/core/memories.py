@@ -1,0 +1,201 @@
+"""Memory-based event control (paper §III-C, Fig. 4).
+
+Per MX-NEURACORE, three memories steer each received event (a source-neuron
+index) to the right A-SYN / A-NEURON engines:
+
+  MEM_E    — event FIFO; each entry is a source-neuron index N_i.
+  MEM_E2A  — row per source neuron: (B_i, A_i) = (#rows in MEM_S&N for N_i,
+             start address of those rows).
+  MEM_S&N  — row = one dispatch *cycle* worth of work: for each of the M
+             A-NEURON engines, (NI_j valid bit, virtual-neuron index k_j of
+             width log2(N), weight address into the A-SYN SRAM).  A source
+             connected to more destinations than one row can carry (at most
+             one per engine per cycle — each engine integrates one synapse
+             per clock) occupies B_i consecutive rows.
+
+The ILP mapping determines which engine/capacitor serves each destination
+neuron; the row count B_i for source i is therefore
+``max_j |{dest of i assigned to engine j}|`` — the ILP's load-balancing
+directly minimizes dispatch cycles.
+
+``dispatch_simulate`` is the cycle-level model: it reproduces the paper's
+MEM_S&N-utilization-vs-time-step curves (Figs 6-7), counts controller cycles
+and engine operations for the energy model, and — crucially — is proven
+equivalent to the dense reference computation (spikes @ W) in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.mapping.ilp import MappingProblem, MappingSolution
+
+
+@dataclasses.dataclass
+class MemTables:
+    """Bit-level content of the three control memories + A-SYN weight SRAM."""
+
+    # MEM_E2A: per source neuron
+    e2a_count: np.ndarray   # B_i  — rows in MEM_S&N
+    e2a_addr: np.ndarray    # A_i  — start row
+    # MEM_S&N: R rows x M engines
+    sn_valid: np.ndarray    # bool [R, M]   — NI_j
+    sn_virt: np.ndarray     # int  [R, M]   — virtual-neuron (capacitor) index
+    sn_waddr: np.ndarray    # int  [R, M]   — weight address in A-SYN SRAM
+    # A-SYN weight SRAM (per engine, addressed by sn_waddr)
+    weight_mem: np.ndarray  # f32  [M, W]
+    # bookkeeping
+    n_engines: int
+    n_caps: int
+    mapping: MappingSolution
+
+    @property
+    def n_rows(self) -> int:
+        return self.sn_valid.shape[0]
+
+    def bits_per_row(self) -> int:
+        """Row width per Fig. 4: M valid bits + M*log2(N) virtual indices +
+        M*ceil(log2(W)) weight addresses."""
+        m = self.n_engines
+        virt_bits = max(int(np.ceil(np.log2(max(self.n_caps, 2)))), 1)
+        waddr_bits = max(int(np.ceil(np.log2(max(self.weight_mem.shape[1], 2)))), 1)
+        return m * (1 + virt_bits + waddr_bits)
+
+
+def build_event_memories(w: np.ndarray, sol: MappingSolution,
+                         n_engines: int, n_caps: int) -> MemTables:
+    """Construct MEM_E2A / MEM_S&N / weight SRAM from a pruned weight matrix
+    ``w[n_src, n_dest]`` and an ILP mapping solution."""
+    n_src, n_dest = w.shape
+    e2a_count = np.zeros(n_src, dtype=np.int64)
+    e2a_addr = np.zeros(n_src, dtype=np.int64)
+    rows_valid, rows_virt, rows_waddr = [], [], []
+    # per-engine weight SRAM allocation (next free address per engine)
+    w_next = np.zeros(n_engines, dtype=np.int64)
+    w_entries: list[list[float]] = [[] for _ in range(n_engines)]
+
+    for m in range(n_src):
+        dests = np.nonzero(w[m])[0]
+        dests = dests[sol.engine[dests] >= 0]          # unassigned are dropped
+        # group by engine; B_m = max per-engine count
+        per_engine: list[list[int]] = [[] for _ in range(n_engines)]
+        for i in dests:
+            per_engine[sol.engine[i]].append(int(i))
+        b = max((len(g) for g in per_engine), default=0)
+        e2a_addr[m] = len(rows_valid)
+        e2a_count[m] = b
+        for r in range(b):
+            valid = np.zeros(n_engines, dtype=bool)
+            virt = np.zeros(n_engines, dtype=np.int64)
+            waddr = np.zeros(n_engines, dtype=np.int64)
+            for j in range(n_engines):
+                if r < len(per_engine[j]):
+                    i = per_engine[j][r]
+                    valid[j] = True
+                    virt[j] = sol.capacitor[i]
+                    waddr[j] = w_next[j]
+                    w_entries[j].append(float(w[m, i]))
+                    w_next[j] += 1
+            rows_valid.append(valid)
+            rows_virt.append(virt)
+            rows_waddr.append(waddr)
+
+    wmax = max(int(w_next.max()), 1)
+    weight_mem = np.zeros((n_engines, wmax), dtype=np.float32)
+    for j in range(n_engines):
+        if w_entries[j]:
+            weight_mem[j, : len(w_entries[j])] = np.array(w_entries[j], dtype=np.float32)
+
+    r = max(len(rows_valid), 1)
+    return MemTables(
+        e2a_count=e2a_count,
+        e2a_addr=e2a_addr,
+        sn_valid=np.array(rows_valid, dtype=bool).reshape(r if rows_valid else 1, n_engines) if rows_valid else np.zeros((1, n_engines), dtype=bool),
+        sn_virt=np.array(rows_virt, dtype=np.int64).reshape(-1, n_engines) if rows_virt else np.zeros((1, n_engines), dtype=np.int64),
+        sn_waddr=np.array(rows_waddr, dtype=np.int64).reshape(-1, n_engines) if rows_waddr else np.zeros((1, n_engines), dtype=np.int64),
+        weight_mem=weight_mem,
+        n_engines=n_engines,
+        n_caps=n_caps,
+        mapping=sol,
+    )
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Per-time-step statistics from the cycle-level simulator."""
+
+    cycles: np.ndarray          # controller cycles spent dispatching, per step
+    rows_touched: np.ndarray    # MEM_S&N rows read, per step (Figs 6-7 signal)
+    engine_ops: np.ndarray      # synaptic MACs executed, per step
+    events: np.ndarray          # events received, per step
+    sn_bytes_touched: np.ndarray  # bytes of MEM_S&N traffic per step
+    mem_e_peak: int             # peak MEM_E occupancy observed
+
+    @property
+    def total_ops(self) -> int:
+        # 1 MAC = 2 ops (mul + add), the TOPS convention used by Table II
+        return int(self.engine_ops.sum()) * 2
+
+    @property
+    def total_cycles(self) -> int:
+        return int(self.cycles.sum())
+
+
+def dispatch_simulate(tables: MemTables, spikes: np.ndarray,
+                      n_dest: int) -> tuple[np.ndarray, DispatchStats]:
+    """Cycle-level event dispatch for a spike train ``spikes[T, n_src]``.
+
+    Returns ``(currents[T, n_dest], stats)`` where ``currents[t, i]`` is the
+    synaptic current accumulated into destination neuron i at step t — must
+    equal ``spikes[t] @ W`` restricted to assigned neurons (tested).
+    """
+    t_steps, n_src = spikes.shape
+    sol = tables.mapping
+    currents = np.zeros((t_steps, n_dest), dtype=np.float32)
+    cycles = np.zeros(t_steps, dtype=np.int64)
+    rows_touched = np.zeros(t_steps, dtype=np.int64)
+    engine_ops = np.zeros(t_steps, dtype=np.int64)
+    events = np.zeros(t_steps, dtype=np.int64)
+    bytes_touched = np.zeros(t_steps, dtype=np.int64)
+    row_bytes = (tables.bits_per_row() + 7) // 8
+    # inverse map (engine, cap) -> dest neuron
+    inv = -np.ones((tables.n_engines, tables.n_caps), dtype=np.int64)
+    for i in range(n_dest):
+        if sol.engine[i] >= 0:
+            inv[sol.engine[i], sol.capacitor[i]] = i
+    mem_e_peak = 0
+    for t in range(t_steps):
+        src_idx = np.nonzero(spikes[t])[0]
+        events[t] = len(src_idx)
+        mem_e_peak = max(mem_e_peak, len(src_idx))
+        for m in src_idx:
+            b, a = int(tables.e2a_count[m]), int(tables.e2a_addr[m])
+            cycles[t] += max(b, 1)  # >=1 cycle to poll MEM_E + read MEM_E2A
+            rows_touched[t] += b
+            bytes_touched[t] += b * row_bytes
+            for r in range(a, a + b):
+                valid = tables.sn_valid[r]
+                for j in np.nonzero(valid)[0]:
+                    k = int(tables.sn_virt[r, j])
+                    i = int(inv[j, k])
+                    wv = tables.weight_mem[j, int(tables.sn_waddr[r, j])]
+                    currents[t, i] += wv
+                    engine_ops[t] += 1
+    stats = DispatchStats(cycles=cycles, rows_touched=rows_touched,
+                          engine_ops=engine_ops, events=events,
+                          sn_bytes_touched=bytes_touched, mem_e_peak=mem_e_peak)
+    return currents, stats
+
+
+def mem_sn_utilization(tables: MemTables, spikes: np.ndarray,
+                       capacity_rows: int) -> np.ndarray:
+    """Fraction of MEM_S&N rows active per time step (Figs 6-7): rows
+    belonging to neurons that spiked at step t over total row capacity."""
+    t_steps = spikes.shape[0]
+    util = np.zeros(t_steps, dtype=np.float64)
+    for t in range(t_steps):
+        src_idx = np.nonzero(spikes[t])[0]
+        util[t] = tables.e2a_count[src_idx].sum() / max(capacity_rows, 1)
+    return util

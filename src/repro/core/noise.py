@@ -1,0 +1,39 @@
+"""Analog non-ideality models (DESIGN.md §2, assumption (a)).
+
+The silicon has op-amp offsets, capacitor mismatch and C2C ladder element
+variation; we model them as optional stochastic perturbations so accuracy
+sensitivity can be studied without circuit simulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogNoise:
+    weight_sigma: float = 0.0      # relative C2C ladder gain error
+    offset_sigma: float = 0.0      # op-amp input-referred offset (abs, V)
+    leak_mismatch: float = 0.0     # relative per-capacitor leak variation
+
+
+def perturb_weights(key: jax.Array, w: jax.Array, noise: AnalogNoise) -> jax.Array:
+    if noise.weight_sigma <= 0:
+        return w
+    return w * (1.0 + noise.weight_sigma * jax.random.normal(key, w.shape))
+
+
+def perturb_membrane(key: jax.Array, v: jax.Array, noise: AnalogNoise) -> jax.Array:
+    if noise.offset_sigma <= 0:
+        return v
+    return v + noise.offset_sigma * jax.random.normal(key, v.shape)
+
+
+def perturb_beta(key: jax.Array, beta: float, shape, noise: AnalogNoise) -> jax.Array:
+    b = jnp.full(shape, beta)
+    if noise.leak_mismatch <= 0:
+        return b
+    return jnp.clip(b * (1.0 + noise.leak_mismatch * jax.random.normal(key, shape)), 0.0, 1.0)

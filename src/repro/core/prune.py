@@ -1,0 +1,51 @@
+"""Unstructured L1 pruning (paper Algorithm 1, step 2).
+
+The accelerator natively supports pruned models: MEM_S&N only stores rows for
+surviving connections, so pruning directly shrinks the event-dispatch work and
+weight memory.  We implement global and per-layer unstructured magnitude (L1)
+pruning as masks, matching torch.nn.utils.prune.l1_unstructured semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l1_prune_mask(w: jax.Array, amount: float) -> jax.Array:
+    """Mask keeping the (1-amount) largest-|w| entries. amount in [0,1)."""
+    if amount <= 0.0:
+        return jnp.ones_like(w, dtype=bool)
+    k = int(round(amount * w.size))
+    if k <= 0:
+        return jnp.ones_like(w, dtype=bool)
+    if k >= w.size:
+        return jnp.zeros_like(w, dtype=bool)
+    flat = jnp.abs(w).reshape(-1)
+    thresh = jnp.sort(flat)[k - 1]
+    return jnp.abs(w) > thresh
+
+
+def prune_pytree(params, amount: float):
+    """Per-layer L1-prune every >=2-D float leaf. Returns (pruned, masks)."""
+
+    def leaf(w):
+        if hasattr(w, "ndim") and w.ndim >= 2 and jnp.issubdtype(w.dtype, jnp.floating):
+            m = l1_prune_mask(w, amount)
+            return w * m, m
+        return w, None
+
+    pruned_and_masks = jax.tree.map(leaf, params)
+    pruned = jax.tree.map(lambda t: t[0], pruned_and_masks, is_leaf=lambda x: isinstance(x, tuple))
+    masks = jax.tree.map(lambda t: t[1], pruned_and_masks, is_leaf=lambda x: isinstance(x, tuple))
+    return pruned, masks
+
+
+def sparsity(params) -> float:
+    """Fraction of zero entries over all >=2-D float leaves."""
+    zeros, total = 0, 0
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            zeros += int(jnp.sum(leaf == 0))
+            total += leaf.size
+    return zeros / max(total, 1)

@@ -1,0 +1,88 @@
+"""8-bit post-training quantization (paper §III, Algorithm 1 step 2).
+
+The accelerator stores weights in 8-bit digital form feeding the C2C ladder
+(eq. (2)): the ladder computes ``V_ref * sum_i W_i 2^{i-n}`` — an unsigned
+fractional n-bit multiply.  Signed weights are handled the way charge-domain
+macros do it in practice: sign-magnitude, with the sign selecting the
+polarity of V_ref.  We therefore quantize symmetrically to int8 with a
+per-tensor (or per-row) scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """int8 values + float scale; dequant = q * scale."""
+
+    q: jax.Array          # int8
+    scale: jax.Array      # f32 scalar or per-axis vector
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+
+def quantize_symmetric(w: jax.Array, bits: int = 8, axis: int | None = None) -> QuantizedTensor:
+    """Symmetric signed quantization to ``bits`` bits.
+
+    axis=None → per-tensor scale; axis=k → per-slice scale along axis k
+    (kept as a broadcastable vector).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale.astype(jnp.float32))
+
+
+def c2c_ladder_value(q_row: jax.Array, bits: int = 8) -> jax.Array:
+    """Ideal C2C-ladder output fraction for a digital word (paper eq. (2)).
+
+    For an unsigned word W with bits W_{n-1}..W_0:
+        frac = sum_{i=0}^{n-1} W_i * 2^{i-n}
+    Signed int8 is treated sign-magnitude (sign flips V_ref polarity).
+    Returns the fraction in [-1, 1), such that ``V_out = V_ref * frac``.
+    """
+    sign = jnp.where(q_row < 0, -1.0, 1.0)
+    mag = jnp.abs(q_row.astype(jnp.int32))
+    weights = 2.0 ** (jnp.arange(bits) - bits)  # 2^{i-n}
+    bit_vals = jnp.stack([(mag >> i) & 1 for i in range(bits)], axis=-1).astype(jnp.float32)
+    return sign * (bit_vals @ weights)
+
+
+def quantize_pytree(params, bits: int = 8):
+    """Quantize every >=2-D float leaf of a pytree (weight matrices); leave
+    biases / scalars in float.  Returns (quantized pytree of QuantizedTensor
+    or raw leaf, dequantized float pytree for execution)."""
+
+    def q_leaf(w):
+        if hasattr(w, "ndim") and w.ndim >= 2 and jnp.issubdtype(w.dtype, jnp.floating):
+            return quantize_symmetric(w, bits=bits)
+        return w
+
+    qtree = jax.tree.map(q_leaf, params)
+
+    def dq_leaf(leaf):
+        if isinstance(leaf, QuantizedTensor):
+            return leaf.dequantize()
+        return leaf
+
+    dqtree = jax.tree.map(dq_leaf, qtree, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    return qtree, dqtree
+
+
+def quantization_error(w: jax.Array, bits: int = 8) -> jax.Array:
+    qt = quantize_symmetric(w, bits=bits)
+    return jnp.max(jnp.abs(qt.dequantize() - w))

@@ -1,0 +1,2 @@
+from repro.data.events import EventDatasetConfig, synthetic_event_dataset, event_batches  # noqa: F401
+from repro.data.tokens import TokenPipelineConfig, token_batches  # noqa: F401

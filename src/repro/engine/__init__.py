@@ -1,0 +1,1 @@
+from repro.engine.train_loop import TrainLoopConfig, TrainState, make_train_step, train_loop  # noqa: F401

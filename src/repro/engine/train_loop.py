@@ -1,0 +1,178 @@
+"""Production training loop: fault tolerance, straggler mitigation, elastic
+restart, gradient compression.
+
+Fault-tolerance model (designed for 1000+ nodes, exercised here on CPU):
+  * **checkpoint/restart** — async atomic checkpoints every
+    ``checkpoint_every`` steps (checkpoint/manager.py); on (re)start the loop
+    resumes from the latest valid step.  The data pipeline is step-keyed, so
+    restart is exactly-once with no reader state.
+  * **preemption** — a ``failure_hook`` (tests inject one) may raise at any
+    step boundary; the loop guarantees the last committed checkpoint is
+    consistent (atomic rename) and restart converges on the same trajectory
+    (tested bit-exact when deterministic).
+  * **straggler mitigation** — per-step deadline: steps slower than
+    ``straggler_factor`` x the trailing-median are counted and logged; at
+    scale the same signal triggers hot-spare swap-in; here it feeds metrics
+    (and tests assert the detection fires on an injected sleep).
+  * **elastic restart** — checkpoints are sharding-agnostic; resuming on a
+    different mesh re-places shards (tests restore 8-dev -> 4-dev -> 8-dev).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager, restore_checkpoint
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import (CompressionConfig, compress_gradients,
+                                  decompress_gradients, init_residual)
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    residual: Any | None = None   # error-feedback state (compression)
+
+    def as_tree(self):
+        t = {"params": self.params, "opt": self.opt}
+        if self.residual is not None:
+            t["residual"] = self.residual
+        return t
+
+    @staticmethod
+    def from_tree(t):
+        return TrainState(params=t["params"], opt=t["opt"],
+                          residual=t.get("residual"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoopConfig:
+    steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    keep_checkpoints: int = 3
+
+
+def init_train_state(bundle_or_loss, params, opt_cfg: AdamWConfig,
+                     comp_cfg: CompressionConfig | None = None) -> TrainState:
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        residual=init_residual(params) if (comp_cfg and comp_cfg.enabled)
+        else None)
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                    comp_cfg: CompressionConfig | None = None,
+                    microbatches: int = 1):
+    """Builds the jittable train step: grad -> (compress->decompress with
+    error feedback) -> AdamW.  Donates the state.
+
+    ``microbatches > 1`` enables gradient accumulation (§Perf iteration 9):
+    the global batch is split along axis 0 and scanned sequentially, so peak
+    activation memory scales with the microbatch — what makes the 67B/235B
+    train_4k cells fit per-device HBM at global batch 256.  Gradients are
+    mathematically the mean over microbatches (bitwise-equal loss up to
+    reduction order; tested).
+    """
+
+    def grad_fn(params, batch):
+        if microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            loss_acc, grads_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + l,
+                    jax.tree.map(jnp.add, grads_acc, g)), None
+
+        split = jax.tree.map(
+            lambda a: a.reshape(microbatches, a.shape[0] // microbatches,
+                                *a.shape[1:]), batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss, grads), _ = jax.lax.scan(
+            micro, (jnp.zeros((), jnp.float32), zeros), split)
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step(state: dict, batch: dict):
+        loss, grads = grad_fn(state["params"], batch)
+        residual = state.get("residual")
+        if comp_cfg and comp_cfg.enabled:
+            comp, residual = compress_gradients(grads, residual, comp_cfg)
+            grads = decompress_gradients(comp, grads)
+        params, opt, metrics = adamw_update(opt_cfg, state["params"],
+                                            state["opt"], grads)
+        new_state = {"params": params, "opt": opt}
+        if residual is not None:
+            new_state["residual"] = residual
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return step
+
+
+def train_loop(state_tree: dict, step_fn, batch_fn, cfg: TrainLoopConfig,
+               start_step: int = 0,
+               failure_hook: Callable[[int], None] | None = None,
+               log_fn: Callable[[str], None] = print):
+    """Run the loop.  ``step_fn(state, batch)`` is (usually jit'd),
+    ``batch_fn(step)`` produces the step's batch (step-keyed, restart-safe).
+
+    Returns (final state, history dict).
+    """
+    mgr = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
+    history = {"loss": [], "step_time": [], "stragglers": 0,
+               "checkpoints": []}
+    durations: list[float] = []
+    step = start_step
+    try:
+        while step < cfg.steps:
+            if failure_hook is not None:
+                failure_hook(step)
+            t0 = time.monotonic()
+            batch = batch_fn(step)
+            state_tree, metrics = step_fn(state_tree, batch)
+            loss = float(metrics["loss"])
+            dt = time.monotonic() - t0
+            durations.append(dt)
+            med = sorted(durations[-32:])[len(durations[-32:]) // 2]
+            if len(durations) > 4 and dt > cfg.straggler_factor * med:
+                history["stragglers"] += 1
+                log_fn(f"[straggler] step {step}: {dt*1e3:.1f}ms vs "
+                       f"median {med*1e3:.1f}ms")
+            history["loss"].append(loss)
+            history["step_time"].append(dt)
+            step += 1
+            if step % cfg.checkpoint_every == 0 or step == cfg.steps:
+                mgr.save_async(step, state_tree, extra={"loss": loss})
+                history["checkpoints"].append(step)
+            if step % cfg.log_every == 0:
+                log_fn(f"step {step}: loss={loss:.4f} "
+                       f"({dt*1e3:.0f} ms/step)")
+    finally:
+        mgr.wait()
+    return state_tree, history
+
+
+def resume_or_init(cfg: TrainLoopConfig, init_state_tree: dict,
+                   shardings=None) -> tuple[dict, int]:
+    """Restore the latest checkpoint if present (elastic: onto any mesh)."""
+    from repro.checkpoint.manager import latest_step
+
+    last = latest_step(cfg.checkpoint_dir)
+    if last is None:
+        return init_state_tree, 0
+    state = restore_checkpoint(cfg.checkpoint_dir, last, init_state_tree,
+                               shardings)
+    return state, last

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: int8-weight matmul — the C2C ladder MAC, MXU-native.
+
+The A-SYN's C2C ladder is an 8-bit digital-word x analog-voltage multiplier
+(paper eq. (2)).  Its TPU-native equivalent is an int8-weight matmul with a
+dequant scale folded into the epilogue: activations (spike rates / counts)
+in f32, weights resident as int8 (half the HBM traffic of bf16), MXU-aligned
+128x128x128 blocking, f32 accumulation across the K grid axis.
+
+Grid = (M/bm, N/bn, K/bk) with the output block revisited along K
+(accumulate-in-place; initialized at k==0).  Block shapes default to MXU
+multiples (128) and keep the working set (bm*bk + bk*bn + bm*bn floats)
+well under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _c2c_matmul_kernel(x_ref, w_ref, scale_ref, out_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                                   # [bm, bk] f32
+    w = w_ref[...].astype(jnp.float32)               # [bk, bn] int8 -> f32
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    out_ref[...] += acc
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out_ref[...] *= scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def c2c_matmul(x: jax.Array, w_q: jax.Array, scale: jax.Array,
+               bm: int = 128, bk: int = 128, bn: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """x [M, K] f32, w_q [K, N] int8, scale scalar f32 -> [M, N] f32."""
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, \
+        f"({m},{k},{n}) not tileable by ({bm},{bk},{bn})"
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    scale_arr = jnp.reshape(scale.astype(jnp.float32), (1,))
+    kern = functools.partial(_c2c_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w_q, scale_arr)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: event-driven synaptic accumulation.
+
+The TPU-native form of MENAGE's A-SYN dispatch (DESIGN.md §2): work is
+proportional to *events*, not to the dense n_src x n_dest product.  A padded
+event list (the software MEM_E) gathers weight rows from the VMEM-resident
+weight tile and accumulates membrane currents.
+
+Tiling: grid = (B, n_dest / BLOCK_D).  Each program instance owns one
+(sample, dest-block) pair; the full event list of that sample and the
+[n_src, BLOCK_D] weight tile are in VMEM.  The inner fori_loop plays the role
+of the controller's per-event dispatch cycles; BLOCK_D is the vectorized lane
+dimension — the "engine" axis onto which virtual neurons are packed.
+
+The event list is padded to a static length E (MEM_E depth).  Padding entries
+are -1 and are masked — the pad factor is the same overflow budget the paper
+provisions for the utilization spikes of Figs 6-7.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_D = 256
+
+
+def _event_synapse_kernel(events_ref, weights_ref, out_ref):
+    """events [1, E] int32; weights [n_src, BD] f32; out [1, BD] f32."""
+    events = events_ref[0, :]                       # [E]
+    n_events = events.shape[0]
+    bd = out_ref.shape[1]
+
+    def body(e, acc):
+        idx = events[e]
+        valid = idx >= 0
+        safe = jnp.where(valid, idx, 0)
+        row = pl.load(weights_ref, (pl.dslice(safe, 1), slice(None)))  # [1, BD]
+        return acc + jnp.where(valid, row[0], jnp.zeros((bd,), acc.dtype))
+
+    acc = jax.lax.fori_loop(0, n_events, body, jnp.zeros((bd,), out_ref.dtype))
+    out_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def event_synapse(events: jax.Array, weights: jax.Array,
+                  block_d: int = DEFAULT_BLOCK_D,
+                  interpret: bool = False) -> jax.Array:
+    """events [B, E] int32 (pad=-1); weights [n_src, n_dest] f32 ->
+    currents [B, n_dest] f32."""
+    b, _ = events.shape
+    n_src, n_dest = weights.shape
+    bd = min(block_d, n_dest)
+    assert n_dest % bd == 0, f"n_dest={n_dest} not divisible by block_d={bd}"
+    grid = (b, n_dest // bd)
+    return pl.pallas_call(
+        _event_synapse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, events.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_src, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_dest), weights.dtype),
+        interpret=interpret,
+    )(events, weights)
+
+
+def events_from_spikes(spikes: jax.Array, max_events: int) -> jax.Array:
+    """Convert a dense spike vector batch [B, n_src] to a padded event list
+    [B, max_events] (int32, pad=-1) — the software MEM_E writer.  Events
+    beyond max_events are dropped (counted by callers via overflow_count)."""
+    b, n = spikes.shape
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    # sort spiking indices to the front: key = (1-spike)*n + arange
+    key = jnp.where(spikes > 0, idx, n + idx)
+    order = jnp.argsort(key, axis=1)[:, :max_events]
+    gathered = jnp.take_along_axis(idx, order, axis=1)
+    valid = jnp.take_along_axis(spikes > 0, order, axis=1)
+    return jnp.where(valid, gathered, -1).astype(jnp.int32)
+
+
+def overflow_count(spikes: jax.Array, max_events: int) -> jax.Array:
+    """How many events were dropped by the static MEM_E depth."""
+    n_spk = (spikes > 0).sum(axis=1)
+    return jnp.maximum(n_spk - max_events, 0)

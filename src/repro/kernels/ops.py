@@ -1,0 +1,37 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode automatically; on
+TPU they compile natively.  `ref.py` holds the pure-jnp oracles.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref  # noqa: F401  (re-exported for convenience)
+from repro.kernels.c2c_matmul import c2c_matmul as _c2c_matmul
+from repro.kernels.event_synapse import (event_synapse as _event_synapse,
+                                         events_from_spikes, overflow_count)
+from repro.kernels.lif_update import lif_update as _lif_update
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def event_synapse(events, weights, block_d: int = 256):
+    return _event_synapse(events, weights, block_d=block_d, interpret=_on_cpu())
+
+
+def lif_update(v, current, *, beta=0.9, threshold=1.0, v_reset=0.0,
+               block=(8, 512)):
+    return _lif_update(v, current, beta=beta, threshold=threshold,
+                       v_reset=v_reset, block=block, interpret=_on_cpu())
+
+
+def c2c_matmul(x, w_q, scale, bm: int = 128, bk: int = 128, bn: int = 128):
+    return _c2c_matmul(x, w_q, scale, bm=bm, bk=bk, bn=bn, interpret=_on_cpu())
+
+
+__all__ = ["event_synapse", "lif_update", "c2c_matmul",
+           "events_from_spikes", "overflow_count", "ref"]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret-mode
+allclose sweeps in tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import c2c_ladder_value
+
+
+def event_synapse_ref(events: jax.Array, weights: jax.Array) -> jax.Array:
+    """Event-driven synaptic accumulation, dense oracle.
+
+    events:  [B, E] int32 — indices of spiking source neurons, padded with -1.
+    weights: [n_src, n_dest] f32.
+    returns: [B, n_dest] f32 — sum of weight rows of the (valid) events.
+    """
+    mask = (events >= 0)[..., None]                      # [B, E, 1]
+    rows = weights[jnp.clip(events, 0), :]               # [B, E, n_dest]
+    return jnp.sum(jnp.where(mask, rows, 0.0), axis=1)
+
+
+def lif_update_ref(v: jax.Array, current: jax.Array, beta: float,
+                   threshold: float, v_reset: float):
+    """Fused LIF membrane update oracle (matches core.lif.lif_step forward)."""
+    v_int = beta * v + current
+    spikes = (v_int >= threshold).astype(v.dtype)
+    v_next = jnp.where(spikes > 0, v_reset, v_int)
+    return v_next, spikes
+
+
+def c2c_matmul_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array) -> jax.Array:
+    """int8-weight matmul oracle: x [M,K] f32, w_q [K,N] int8, scale scalar.
+
+    out = x @ (w_q * scale)
+    """
+    return x @ (w_q.astype(jnp.float32) * scale)
+
+
+def c2c_matmul_ladder_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array,
+                          bits: int = 8) -> jax.Array:
+    """Bit-serial evaluation through the *ideal C2C ladder* (paper eq. (2)):
+
+        V_out = V_ref * sum_i W_i 2^{i-n},   V_ref = scale * 2^n
+
+    Proves the kernel computes exactly what the analog ladder would ideally
+    produce (sign-magnitude handling per quant.py).
+    """
+    frac = c2c_ladder_value(w_q, bits=bits)              # q / 2^n in [-1, 1)
+    v_ref = scale * (2.0**bits)
+    return x @ (frac * v_ref)

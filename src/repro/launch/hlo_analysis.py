@@ -1,0 +1,137 @@
+"""Post-compile HLO analysis: collective-traffic accounting + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs / bytes; collective bytes are NOT there,
+so we parse the optimized HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# ---- v5e chip constants ----------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Total bytes of all array shapes in an HLO type signature string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in optimized HLO.
+
+    Uses the op's *result* shape (bytes landing on each device), the quantity
+    that traverses links under the standard ring-algorithm accounting.
+    Handles both plain (`x = f32[..] all-reduce(...)`) and `-start/-done`
+    async pairs (counting only the `-start`).
+    """
+    by_bytes: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    by_count: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match `bf16[...] all-reduce(` or `(...) all-gather-start(`
+            if re.search(rf"\b{kind}(-start)?\(", rhs):
+                if re.search(rf"\b{kind}-done\(", rhs):
+                    break
+                # result shape(s) precede the op name in rhs
+                sig = rhs.split(kind)[0]
+                by_bytes[kind] += _shape_bytes(sig)
+                by_count[kind] += 1
+                break
+    return CollectiveStats(bytes_by_kind=by_bytes, count_by_kind=by_count)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-device roofline terms in seconds (assignment §Roofline)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float             # whole-program (all devices)
+    hlo_bytes: float
+    coll_bytes: float
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "step_time_s": self.step_time_s}
+
+
+def roofline_terms(cost: dict, coll, n_devices: int) -> RooflineTerms:
+    """Derive the three terms.
+
+    The compiled module is the per-device SPMD program, so all inputs here
+    are per-device.  ``coll`` is anything exposing total collective bytes
+    (CollectiveStats.total_bytes or hlo_flops.HloCost.total_coll_bytes).
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_ = float(cost.get("bytes accessed", 0.0))
+    cb = float(getattr(coll, "total_bytes", None)
+               or getattr(coll, "total_coll_bytes", 0.0) or 0.0)
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=cb / ICI_BW,
+        hlo_flops=flops, hlo_bytes=bytes_, coll_bytes=cb,
+        n_devices=n_devices)
+
+
+def model_flops(n_params_active: float, n_tokens: float,
+                kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward."""
+    c = 6.0 if kind == "train" else 2.0
+    return c * n_params_active * n_tokens

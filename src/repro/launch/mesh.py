@@ -1,0 +1,34 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; tests and benches see the 1 real CPU device.
+
+Topology mapping (TPU v5e): ``model`` is the innermost axis -> ICI-contiguous
+(TP collectives at full link bandwidth); ``data`` spans the pod's other ICI
+dim (FSDP all-gathers); ``pod`` crosses DCN (gradient all-reduce only).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests, elastic restart experiments)."""
+    return jax.make_mesh(shape, axes)
+
+
+def host_device_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    n = len(jax.devices())
+    n_data = min(n_data, n)
+    n_model = max(min(n_model, n // n_data), 1)
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

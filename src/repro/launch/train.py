@@ -1,0 +1,88 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2_1_8b \
+      --steps 1000 --mesh 16,16 [--smoke] [--compress] [--ckpt DIR]
+
+On real hardware the mesh maps onto the pod's devices; on this CPU container
+use --smoke (reduced config + small mesh over emulated devices via
+XLA_FLAGS=--xla_force_host_platform_device_count=N).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.data.tokens import TokenPipelineConfig, token_batch
+from repro.engine.train_loop import (TrainLoopConfig, init_train_state,
+                                     make_train_step, resume_or_init,
+                                     train_loop)
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compress import CompressionConfig
+from repro.parallel.sharding import TRAIN_RULES, activate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--mesh", default="1,1", help="data,model")
+    ap.add_argument("--seq", type=int, default=0, help="0 = train_4k shape")
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=200)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    assert cfg.family != "encdec" or True
+    shape = SHAPES["train_4k"]
+    seq = args.seq or (64 if args.smoke else shape.seq_len)
+    batch = args.batch or (8 if args.smoke else shape.global_batch)
+    bundle = build_model(cfg)
+    data_cfg = TokenPipelineConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                   global_batch=batch)
+    dm, mm = (int(x) for x in args.mesh.split(","))
+    mesh = jax.make_mesh((dm, mm), ("data", "model"))
+    opt_cfg = AdamWConfig(lr=args.lr)
+    comp = CompressionConfig(enabled=args.compress)
+
+    with activate(mesh, TRAIN_RULES):
+        params = bundle.init(jax.random.key(0))
+        n = sum(p.size for p in jax.tree.leaves(params))
+        print(f"{cfg.name}: {n/1e6:.1f}M params, mesh {mesh.devices.shape}, "
+              f"batch {batch} x seq {seq}")
+        state = init_train_state(None, params, opt_cfg, comp).as_tree()
+        step_fn = jax.jit(make_train_step(bundle.loss, opt_cfg, comp),
+                          donate_argnums=(0,))
+        loop_cfg = TrainLoopConfig(steps=args.steps,
+                                   checkpoint_every=args.checkpoint_every,
+                                   checkpoint_dir=args.ckpt)
+        state, start = resume_or_init(loop_cfg, state)
+
+        def batch_fn(step):
+            if cfg.family == "encdec":
+                b = token_batch(data_cfg, step)
+                return {"frames": jnp.zeros((batch, seq, cfg.d_model)),
+                        "tokens": jnp.asarray(
+                            b["tokens"][:, :seq // cfg.decoder_ratio + 1])}
+            b = {"tokens": jnp.asarray(token_batch(data_cfg, step)["tokens"])}
+            if cfg.n_image_embeds:
+                b["image_embeds"] = jnp.zeros(
+                    (batch, cfg.n_image_embeds, cfg.d_model))
+            return b
+
+        state, hist = train_loop(state, step_fn, batch_fn, loop_cfg,
+                                 start_step=start)
+    print(f"final loss {hist['loss'][-1]:.4f}; "
+          f"checkpoints: {hist['checkpoints']}")
+
+
+if __name__ == "__main__":
+    main()

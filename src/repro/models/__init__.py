@@ -1,0 +1,1 @@
+from repro.models.api import ModelBundle, build_model  # noqa: F401

@@ -1,0 +1,266 @@
+"""Shared model layers + the param-spec system.
+
+Params are nested dicts of arrays; every param is declared through a
+:class:`P` spec carrying its *logical axis names*, so initialization and
+sharding annotations can never drift apart.  Logical axes are mapped to mesh
+axes by the rules in ``repro.parallel.sharding``.
+
+Logical axis vocabulary (weights):
+  layers      — scanned layer stack dim (never sharded)
+  embed       — model width on weights (FSDP -> 'data')
+  heads/kv_heads — attention heads (TP -> 'model')
+  head_dim    — per-head width (unsharded)
+  mlp         — FFN hidden (TP -> 'model')
+  vocab       — embedding rows / logits (TP -> 'model')
+  experts     — MoE expert dim (EP -> 'model' when divisible)
+  expert_mlp  — per-expert FFN hidden (TP fallback for MoE)
+  ssm_*       — Mamba2 dims
+Activations use the ``act_*`` names (see sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- param specs
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Param spec: shape + logical axes + init."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float | None = None    # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_params(key: jax.Array, specs: Any, dtype=jnp.float32):
+    """Materialize a pytree of P specs into arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        assert isinstance(spec, P), f"non-spec leaf {spec!r}"
+        if spec.init == "zeros":
+            a = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            a = jnp.ones(spec.shape, dtype)
+        else:
+            if spec.scale is not None:
+                std = spec.scale
+            elif spec.init == "embed":
+                std = 1.0
+            else:  # fan-in
+                fan_in = spec.shape[0] if len(spec.shape) == 1 else math.prod(
+                    spec.shape[:-1])
+                # for stacked-layer weights the leading 'layers' dim is not fan-in
+                if len(spec.axes) >= 2 and spec.axes[0] == "layers":
+                    fan_in = math.prod(spec.shape[1:-1]) or spec.shape[-1]
+                std = 1.0 / math.sqrt(max(fan_in, 1))
+            a = std * jax.random.normal(k, spec.shape, dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_axes(specs: Any):
+    """Same pytree, leaves replaced by the logical-axes tuples."""
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(specs: Any, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree (for AOT lowering without allocation)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- primitives
+
+def bf16_layers(tree):
+    """Cast a stacked-layer param pytree to bf16 ONCE, outside the scan
+    (§Perf iteration 2): the per-layer FSDP all-gather inside the scan then
+    moves bf16 (half the bytes) and each weight converts once per step
+    instead of once per layer visit (fwd + bwd + remat)."""
+    return jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dtype)
+
+
+def rotary_embed(x: jax.Array, positions: jax.Array,
+                 theta: float = 10000.0) -> jax.Array:
+    """RoPE.  x: [..., S, H, D] (D even); positions: [..., S] int."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # [..., S, half]
+    ang = ang[..., None, :]                                     # broadcast heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU FFN: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", g * u, w_down)
+
+
+# ------------------------------------------------------- chunked flash attn
+
+def _attn_chunk(q, k, v, qpos, kpos, window: int | None, causal: bool,
+                softmax_scale: float):
+    """One (q-chunk x kv-chunk) tile of online-softmax attention.
+
+    q: [B, Qc, KH, G, D]; k, v: [B, Kc, KH, D]; returns (m, l, o) partials.
+
+    Numerics (§Perf iteration 1): operands stay in their storage dtype
+    (bf16) — the QK^T and PV matmuls accumulate in f32 via
+    ``preferred_element_type`` instead of upcasting K/V, which removed the
+    per-q-chunk full-KV f32 convert+copy the baseline HLO showed.
+    Set REPRO_BASELINE_ATTN=1 to restore the pre-iteration-1 numerics (used
+    to reproduce the §Perf baseline measurements).
+    """
+    import os as _os
+    if _os.environ.get("REPRO_BASELINE_ATTN"):
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * softmax_scale
+        mask = jnp.ones((q.shape[1], k.shape[1]), dtype=bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m = jnp.max(s, axis=-1)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        return m, l, o
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q, k,
+                   preferred_element_type=jnp.float32) * softmax_scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)                                   # [B,Qc,KH,G]
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True, window: int | None = None,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    q_offset: int = 0) -> jax.Array:
+    """Memory-bounded attention with GQA.
+
+    q: [B, Sq, H, D]; k, v: [B, Sk, KH, D]; H % KH == 0.
+    Scans over q chunks (rematerialized) with an inner scan over kv chunks —
+    peak live buffer is O(q_chunk * kv_chunk), never S^2.
+    ``q_offset``: absolute position of q[0] (cross/self prefill alignment).
+    """
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    assert h % kh == 0
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # pad to multiples
+    pad_q = (-sq) % q_chunk
+    pad_k = (-sk) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+    qp = qp.reshape(b, nq, q_chunk, kh, g, d)
+    kp = kp.reshape(b, nk, kv_chunk, kh, d)
+    vp = vp.reshape(b, nk, kv_chunk, kh, d)
+    kpos_all = jnp.arange(nk * kv_chunk)
+    kv_valid = kpos_all < sk
+
+    def one_q_chunk(qi_and_chunk):
+        qi, qc = qi_and_chunk
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def body(carry, inputs):
+            m, l, o = carry
+            kc, vc, ki = inputs
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask_valid = kpos < sk
+            kpos = jnp.where(mask_valid, kpos, jnp.iinfo(jnp.int32).max)
+            mi, li, oi = _attn_chunk(qc, kc, vc, qpos, kpos, window, causal,
+                                     scale)
+            m_new = jnp.maximum(m, mi)
+            m_new_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            a = jnp.exp(jnp.where(jnp.isfinite(m), m, -jnp.inf) - m_new_safe)
+            bcoef = jnp.exp(jnp.where(jnp.isfinite(mi), mi, -jnp.inf) - m_new_safe)
+            l_new = a * l + bcoef * li
+            o_new = a[..., None] * o + bcoef[..., None] * oi
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((b, q_chunk, kh, g), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kh, g), jnp.float32)
+        o0 = jnp.zeros((b, q_chunk, kh, g, d), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            body, (m0, l0, o0),
+            (kp.swapaxes(0, 1), vp.swapaxes(0, 1), jnp.arange(nk)))
+        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    outs = jax.lax.map(jax.checkpoint(one_q_chunk),
+                       (jnp.arange(nq), qp.swapaxes(0, 1)))
+    out = outs.swapaxes(0, 1).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq]
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset: int = 0):
+    """O(S^2) oracle for flash_attention (tests only)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    g = h // kh
+    qr = q.reshape(b, sq, kh, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k) / math.sqrt(d)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqhgk,bkhd->bqhgd", p, v).reshape(b, sq, h, d)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token cross-entropy.  logits [..., V], targets [...] int."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,278 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+The SSD recurrence per head:  h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] x[t],
+y[t] = C[t]·h[t] + D x[t] — note this *is* the paper's LIF membrane equation
+(1) without a firing threshold (DESIGN.md §Arch-applicability): the same
+leaky-integrator scan machinery, which is why the MENAGE core and this model
+share their discretization conventions.
+
+Implementation: chunked scan — ``lax.scan`` over sequence chunks carrying the
+inter-chunk state [B, H, P, N]; intra-chunk work is the quadratic-in-Q
+masked einsum (Q = ssm_chunk, default 64-256) so peak buffers are
+O(B·H·Q²), never O(L²).  Decode is the O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models.layers import (P, bf16_layers, cross_entropy,
+                                 init_params, param_axes, rms_norm)
+from repro.parallel.sharding import shard
+
+
+def _dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba2_layer_specs(cfg: ArchConfig, n_layers: int | None = None) -> dict:
+    d = cfg.d_model
+    d_in, h, n, p = _dims(cfg)
+    L = cfg.n_layers if n_layers is None else n_layers
+    cw = cfg.ssm_conv_width
+    return {
+        "ln": P((L, d), ("layers", "embed"), "ones"),
+        # in_proj -> [z, x, B, C, dt]
+        "w_z": P((L, d, d_in), ("layers", "embed", "ssm_inner")),
+        "w_x": P((L, d, d_in), ("layers", "embed", "ssm_inner")),
+        "w_b": P((L, d, n), ("layers", "embed", "ssm_state")),
+        "w_c": P((L, d, n), ("layers", "embed", "ssm_state")),
+        "w_dt": P((L, d, h), ("layers", "embed", "ssm_heads")),
+        "dt_bias": P((L, h), ("layers", "ssm_heads"), "zeros"),
+        "a_log": P((L, h), ("layers", "ssm_heads"), "zeros"),
+        "d_skip": P((L, h), ("layers", "ssm_heads"), "ones"),
+        "conv_x": P((L, cw, d_in), ("layers", "conv_width", "ssm_inner"),
+                    scale=0.5),
+        "ln_y": P((L, d_in), ("layers", "ssm_inner"), "ones"),
+        "w_out": P((L, d_in, d), ("layers", "ssm_inner", "embed")),
+    }
+
+
+def mamba2_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "embed": P((cfg.vocab_size, d), ("vocab", "embed"), "embed", scale=0.02),
+        "lm_head": P((d, cfg.vocab_size), ("embed", "vocab")),
+        "ln_f": P((d,), ("embed",), "ones"),
+        "layers": mamba2_layer_specs(cfg),
+    }
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype=jnp.float32):
+    return init_params(key, mamba2_specs(cfg), dtype)
+
+
+def mamba2_axes(cfg: ArchConfig):
+    return param_axes(mamba2_specs(cfg))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x [B, L, D], w [CW, D]."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int):
+    """Chunked SSD.  x [B,L,H,P]; dt [B,L,H]; a [H] (negative);
+    b, c [B,L,N] (single group).  Returns y [B,L,H,P], final state [B,H,P,N].
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        # dt=0 on padded steps -> decay exp(0)=1, zero input: state unchanged
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        l_out, l = l, l + pad
+    else:
+        l_out = l
+    nc = l // q
+    xs = x.reshape(bsz, nc, q, h, p)
+    dts = dt.reshape(bsz, nc, q, h)
+    bs = b.reshape(bsz, nc, q, n)
+    cs = c.reshape(bsz, nc, q, n)
+
+    def per_chunk(state, inp):
+        # NOTE (§Perf iteration 8, REFUTED): casting the O(q^2) einsums to
+        # bf16 w/ f32 accumulation made the memory term WORSE (+1.3%) under
+        # the schedule-level instrument — the materialized operand converts
+        # cost more than the smaller einsum reads saved — and added ~2.5e-2
+        # numeric error vs the sequential oracle.  Kept in f32.
+        xc, dtc, bc, cc = inp              # [B,q,h,p], [B,q,h], [B,q,n] x2
+        da = dtc * a                       # [B,q,h]  (negative)
+        cum = jnp.cumsum(da, axis=1)       # [B,q,h]
+        # intra-chunk: y[l] += sum_{s<=l} C[l]·B[s] exp(cum[l]-cum[s]) dt[s] x[s]
+        seg = cum[:, :, None, :] - cum[:, None, :, :]      # [B,q,q,h]
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bln,bsn->bls", cc, bc)        # [B,q,q]
+        w = scores[:, :, :, None] * decay                  # [B,q,q,h]
+        y = jnp.einsum("blsh,bsh,bshp->blhp", w, dtc, xc)
+        # contribution of the carried-in state
+        dec_in = jnp.exp(cum)                              # [B,q,h]
+        y = y + jnp.einsum("bln,blh,bhpn->blhp", cc, dec_in, state)
+        # new state
+        dec_out = jnp.exp(cum[:, -1:, :] - cum)            # [B,q,h]
+        new_state = state * jnp.exp(cum[:, -1])[:, :, None, None]
+        new_state = new_state + jnp.einsum(
+            "bsh,bsn,bshp->bhpn", dtc * dec_out, bc, xc)
+        return new_state, y
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    inputs = (xs.swapaxes(0, 1), dts.swapaxes(0, 1), bs.swapaxes(0, 1),
+              cs.swapaxes(0, 1))
+    state, ys = jax.lax.scan(
+        lambda s, i: per_chunk(s, i), state0, inputs)
+    y = ys.swapaxes(0, 1).reshape(bsz, l, h, p)[:, :l_out]
+    return y, state
+
+
+def mamba2_block(x: jax.Array, lp: dict, cfg: ArchConfig,
+                 collect_state: bool = False):
+    """One Mamba2 block (full sequence).  x [B, L, d]."""
+    d_in, h, n, p = _dims(cfg)
+    hidden = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z = jnp.einsum("bld,de->ble", hidden, lp["w_z"])
+    xin = jnp.einsum("bld,de->ble", hidden, lp["w_x"])
+    xin = shard(xin, "act_batch", "act_seq", "act_ssm_inner")
+    xin = jax.nn.silu(_causal_conv(xin, lp["conv_x"]))
+    bmat = jnp.einsum("bld,dn->bln", hidden, lp["w_b"])
+    cmat = jnp.einsum("bld,dn->bln", hidden, lp["w_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", hidden, lp["w_dt"]) + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    xh = xin.reshape(*xin.shape[:2], h, p)
+    y, state = ssd_scan(xh.astype(jnp.float32), dt.astype(jnp.float32), a,
+                        bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+                        cfg.ssm_chunk)
+    y = y + lp["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xin.shape[:2], d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), lp["ln_y"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, lp["w_out"])
+    out = shard(out, "act_batch", "act_seq", "act_embed")
+    return x + out, state
+
+
+def mamba2_logits(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                  remat: bool = True) -> jax.Array:
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(cfg.d_model)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(xx, lp):
+        xx, _ = mamba2_block(xx, lp, cfg)
+        return xx, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, bf16_layers(params["layers"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(jnp.bfloat16))
+    return shard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def mamba2_loss(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    toks = batch["tokens"]
+    logits = mamba2_logits(params, cfg, toks[:, :-1])
+    return cross_entropy(logits, toks[:, 1:])
+
+
+# ------------------------------------------------------------------ decode
+
+def mamba2_cache_spec(cfg: ArchConfig, batch: int, n_layers: int | None = None):
+    d_in, h, n, p = _dims(cfg)
+    L = cfg.n_layers if n_layers is None else n_layers
+    cw = cfg.ssm_conv_width
+    return ({"ssm": jax.ShapeDtypeStruct((L, batch, h, p, n), jnp.float32),
+             "conv": jax.ShapeDtypeStruct((L, batch, cw - 1, d_in), jnp.bfloat16)},
+            {"ssm": ("layers", "cache_batch", "act_ssm_heads", "act_head_dim",
+                     "act_ssm_state"),
+             "conv": ("layers", "cache_batch", "conv_width", "act_ssm_inner")})
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch: int, n_layers=None):
+    spec, _ = mamba2_cache_spec(cfg, batch, n_layers)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def mamba2_block_decode(x: jax.Array, lp: dict, cfg: ArchConfig,
+                        ssm_state: jax.Array, conv_state: jax.Array):
+    """One token step.  x [B, d]; ssm_state [B,h,p,n]; conv_state [B,cw-1,d_in]."""
+    d_in, h, n, p = _dims(cfg)
+    hidden = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z = jnp.einsum("bd,de->be", hidden, lp["w_z"])
+    xin = jnp.einsum("bd,de->be", hidden, lp["w_x"])
+    # conv over [state ; xin]
+    window = jnp.concatenate([conv_state, xin[:, None]], axis=1)  # [B,cw,d_in]
+    conv_out = jnp.einsum("bce,ce->be", window.astype(jnp.float32),
+                          lp["conv_x"].astype(jnp.float32))
+    xc = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:]
+    bvec = jnp.einsum("bd,dn->bn", hidden, lp["w_b"])
+    cvec = jnp.einsum("bd,dn->bn", hidden, lp["w_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", hidden, lp["w_dt"]) + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))
+    xh = xc.reshape(-1, h, p).astype(jnp.float32)
+    decay = jnp.exp(dt.astype(jnp.float32) * a)                   # [B,h]
+    new_state = (ssm_state * decay[:, :, None, None]
+                 + jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                              bvec.astype(jnp.float32), xh))
+    y = jnp.einsum("bn,bhpn->bhp", cvec.astype(jnp.float32), new_state)
+    y = y + lp["d_skip"][None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), lp["ln_y"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, lp["w_out"])
+    return x + out, new_state, new_conv
+
+
+def mamba2_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                       tokens: jax.Array, pos: jax.Array):
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(cfg.d_model)
+    x = shard(x, "act_batch", "act_embed")
+
+    def body(xx, layer_in):
+        lp, ssm, conv = layer_in
+        xx, new_ssm, new_conv = mamba2_block_decode(xx, lp, cfg, ssm, conv)
+        return xx, (new_ssm, new_conv)
+
+    x, (ssm, conv) = jax.lax.scan(
+        body, x, (bf16_layers(params["layers"]), cache["ssm"],
+                  cache["conv"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"].astype(jnp.bfloat16))
+    return shard(logits, "act_batch", "act_vocab"), {"ssm": ssm, "conv": conv}
+
+
+def mamba2_reference_scan(x, dt, a, b, c):
+    """O(L) step-by-step SSD oracle (tests): returns y, final state."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)                          # [B,h]
+        state = state * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    state, ys = jax.lax.scan(
+        step, state,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), b.swapaxes(0, 1),
+         c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), state

@@ -1,0 +1,354 @@
+"""Decoder-only transformer LM: GQA, RoPE, RMSNorm, SWA, MoE, VLM prefix.
+
+One composable implementation covers the dense (internlm2, deepseek-67b,
+h2o-danube), MoE (qwen3-moe, mixtral), and VLM-backbone (internvl2) assigned
+architectures.  Layers are stacked along a leading ``layers`` axis and
+executed with ``jax.lax.scan`` (+ remat) so the compiled HLO is O(1) in depth
+— the standard production pattern (MaxText) and what keeps the 512-device
+dry-run compile tractable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models.layers import (P, bf16_layers as L_bf16, cross_entropy,
+                                 flash_attention, init_params, param_axes,
+                                 rms_norm, rotary_embed, swiglu)
+from repro.parallel.sharding import shard
+
+
+# ----------------------------------------------------------------- specs
+
+def transformer_specs(cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    h, kh, L = cfg.n_heads, cfg.n_kv_heads, cfg.n_layers
+    layer: dict[str, P] = {
+        "ln1": P((L, d), ("layers", "embed"), "ones"),
+        "ln2": P((L, d), ("layers", "embed"), "ones"),
+        "wq": P((L, d, h, hd), ("layers", "embed", "heads", "head_dim")),
+        "wk": P((L, d, kh, hd), ("layers", "embed", "kv_heads", "head_dim")),
+        "wv": P((L, d, kh, hd), ("layers", "embed", "kv_heads", "head_dim")),
+        "wo": P((L, h, hd, d), ("layers", "heads", "head_dim", "embed")),
+    }
+    if cfg.n_experts:
+        e, eff = cfg.n_experts, cfg.d_ff
+        layer.update({
+            "router": P((L, d, e), ("layers", "embed", "experts")),
+            "we_gate": P((L, e, d, eff), ("layers", "experts", "expert_embed", "expert_mlp")),
+            "we_up": P((L, e, d, eff), ("layers", "experts", "expert_embed", "expert_mlp")),
+            "we_down": P((L, e, eff, d), ("layers", "experts", "expert_mlp", "expert_embed")),
+        })
+    else:
+        layer.update({
+            "w_gate": P((L, d, cfg.d_ff), ("layers", "embed", "mlp")),
+            "w_up": P((L, d, cfg.d_ff), ("layers", "embed", "mlp")),
+            "w_down": P((L, cfg.d_ff, d), ("layers", "mlp", "embed")),
+        })
+    return {
+        "embed": P((cfg.vocab_size, d), ("vocab", "embed"), "embed", scale=0.02),
+        "lm_head": P((d, cfg.vocab_size), ("embed", "vocab")),
+        "ln_f": P((d,), ("embed",), "ones"),
+        "layers": layer,
+    }
+
+
+def transformer_axes(cfg: ArchConfig):
+    return param_axes(transformer_specs(cfg))
+
+
+def init_transformer(key: jax.Array, cfg: ArchConfig, dtype=jnp.float32):
+    return init_params(key, transformer_specs(cfg), dtype)
+
+
+# ----------------------------------------------------------------- MoE FFN
+
+def moe_ffn(x: jax.Array, lp: dict, cfg: ArchConfig,
+            capacity_factor: float = 1.25):
+    """Token-choice top-k MoE with sort-based static-capacity dispatch.
+
+    x: [B, S, d].  Returns (y, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, k)                  # [t, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(2 ** math.ceil(math.log2(max(t * k / e * capacity_factor, 1))))
+    cap = min(cap, t)
+    # sort (token,k) pairs by expert; position within expert via searchsorted
+    flat_e = expert_idx.reshape(-1)                             # [t*k]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    grp_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(t * k) - grp_start
+    slot = sorted_e * cap + pos_in_e                            # [t*k]
+    keep = pos_in_e < cap
+    token_of = order // k                                       # source token
+    # dispatch: [e*cap, d]
+    disp = jnp.zeros((e * cap, d), x.dtype)
+    disp = disp.at[jnp.where(keep, slot, e * cap)].add(
+        xf[token_of], mode="drop")
+    disp = shard(disp.reshape(e, cap, d), "act_experts", "act_expert_cap",
+                 "act_embed")
+    # expert FFN
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", disp, lp["we_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", disp, lp["we_up"])
+    out = jnp.einsum("ecf,efd->ecd", g * u, lp["we_down"])
+    out = shard(out, "act_experts", "act_expert_cap", "act_embed").reshape(
+        e * cap, d)
+    # combine
+    contrib = out[jnp.where(keep, slot, 0)] * (
+        keep * gate.reshape(-1)[order])[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[token_of].add(contrib)
+    return y.reshape(b, s, d), aux
+
+
+# ------------------------------------------------------------- layer body
+
+def _attn_block(x: jax.Array, lp: dict, cfg: ArchConfig, positions: jax.Array,
+                q_chunk: int, kv_chunk: int):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    kk = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    q = shard(q, "act_batch", "act_seq", "act_heads", "act_head_dim")
+    kk = shard(kk, "act_batch", "act_seq", "act_kv_heads", "act_head_dim")
+    q = rotary_embed(q, positions, cfg.rope_theta)
+    kk = rotary_embed(kk, positions, cfg.rope_theta)
+    o = flash_attention(q, kk, v, causal=True, window=cfg.window,
+                        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    o = jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+    return x + shard(o, "act_batch", "act_seq", "act_embed")
+
+
+def _ffn_block(x: jax.Array, lp: dict, cfg: ArchConfig):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        # §Perf iteration 4: under an active multi-device mesh, use the
+        # shard_map MoE (locality-exact dispatch, psum-only collectives);
+        # the GSPMD einsum path remains as the single-device/test fallback.
+        import os as _os
+        from repro.parallel.sharding import active_mesh
+        mesh = active_mesh()
+        if mesh is not None and "model" in mesh.axis_names \
+                and mesh.devices.size > 1 \
+                and not _os.environ.get("REPRO_BASELINE_MOE"):
+            from repro.parallel.moe import moe_ffn_sharded
+            y, aux = moe_ffn_sharded(h, lp, cfg, mesh)
+        else:
+            y, aux = moe_ffn(h, lp, cfg)
+    else:
+        y = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        y = shard(y, "act_batch", "act_seq", "act_embed")
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def transformer_layer(x, lp, cfg: ArchConfig, positions, q_chunk=512,
+                      kv_chunk=512):
+    x = _attn_block(x, lp, cfg, positions, q_chunk, kv_chunk)
+    x, aux = _ffn_block(x, lp, cfg)
+    return x, aux
+
+
+# ------------------------------------------------------------- full forward
+
+def transformer_logits(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                       image_embeds: jax.Array | None = None,
+                       q_chunk: int = 1024, kv_chunk: int = 2048,
+                       remat: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  tokens [B, S] -> (logits [B, S, V], aux)."""
+    import os as _os
+    if _os.environ.get("REPRO_BASELINE_CHUNKS"):   # §Perf iteration 3 baseline
+        q_chunk, kv_chunk = 512, 512
+    b, s = tokens.shape
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    x = x.astype(jnp.bfloat16)
+    if image_embeds is not None:
+        n_img = image_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice(
+            x, image_embeds.astype(x.dtype), (0, 0, 0))
+        del n_img
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        xx, aux = carry
+        xx, a = transformer_layer(xx, lp, cfg, positions, q_chunk, kv_chunk)
+        return (xx, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               L_bf16(params["layers"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(jnp.bfloat16))
+    logits = shard(logits, "act_batch", "act_seq", "act_vocab")
+    return logits, aux
+
+
+def transformer_loss(params, cfg: ArchConfig, batch: dict,
+                     q_chunk: int = 1024, kv_chunk: int = 2048) -> jax.Array:
+    toks = batch["tokens"]
+    inputs, targets = toks[:, :-1], toks[:, 1:]
+    logits, aux = transformer_logits(params, cfg, inputs,
+                                     batch.get("image_embeds"),
+                                     q_chunk, kv_chunk)
+    return cross_entropy(logits, targets) + 0.01 * aux
+
+
+# ------------------------------------------------------------------ decode
+
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int):
+    """ShapeDtypeStructs of the KV cache pytree (+ logical axes)."""
+    hd = cfg.resolved_head_dim()
+    clen = min(cache_len, cfg.window) if cfg.window else cache_len
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, clen, hd)
+    axes = ("layers", "cache_batch", "cache_kv_heads", "cache_seq",
+            "act_head_dim")
+    return ({"k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+             "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16)},
+            {"k": axes, "v": axes})
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    spec, _ = cache_spec(cfg, batch, cache_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def _cache_positions(cfg: ArchConfig, clen: int, pos: jax.Array) -> jax.Array:
+    """Absolute position held by each cache slot (ring buffer for SWA)."""
+    idx = jnp.arange(clen)
+    if cfg.window:
+        # slot i holds the largest p <= pos with p % clen == i
+        p = pos - ((pos - idx) % clen)
+        return jnp.where(p < 0, -1, p)
+    return jnp.where(idx <= pos, idx, -1)
+
+
+def decode_attention(q, ck, cv, slot_pos, pos, window):
+    """q [B,H,hd]; ck/cv [B,KH,C,hd]; slot_pos [C] absolute positions, -1
+    invalid.  Plain (baseline) attention over the cache."""
+    b, h, hd = q.shape
+    kh = ck.shape[1]
+    g = h // kh
+    qr = q.reshape(b, kh, g, hd)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qr, ck.astype(qr.dtype)) / math.sqrt(hd)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= (pos - slot_pos) < window
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(qr.dtype)
+    o = jnp.einsum("bhgc,bhcd->bhgd", p, cv.astype(qr.dtype))
+    return o.reshape(b, h, hd)
+
+
+def transformer_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                            tokens: jax.Array, pos: jax.Array,
+                            attn_impl=decode_attention):
+    """One decode step.  tokens [B] int32; pos scalar int32 (next position).
+
+    Returns (logits [B, V], new_cache).  ``attn_impl`` is swappable — the SP
+    flash-decode path (parallel/decode.py) plugs in here.
+    """
+    b = tokens.shape[0]
+    hd = cfg.resolved_head_dim()
+    clen = cache["k"].shape[3]
+    slot = pos % clen if cfg.window else pos
+    slot_pos = _cache_positions(cfg, clen, pos)
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    x = x.astype(jnp.bfloat16)
+    x = shard(x, "act_batch", "act_embed")
+
+    def body(x, layer_in):
+        lp, ck, cv = layer_in
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
+        k_new = jnp.einsum("bd,dhk->bhk", h, lp["wk"])
+        v_new = jnp.einsum("bd,dhk->bhk", h, lp["wv"])
+        posb = jnp.broadcast_to(pos, (b, 1))
+        q = rotary_embed(q[:, None], posb, cfg.rope_theta)[:, 0]
+        k_new = rotary_embed(k_new[:, None], posb, cfg.rope_theta)[:, 0]
+        ck = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype)[:, :, None],
+                                          (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype)[:, :, None],
+                                          (0, 0, slot, 0))
+        o = attn_impl(q, ck, cv, slot_pos, pos, cfg.window)
+        x = x + jnp.einsum("bhk,hkd->bd", o, lp["wo"])
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = moe_ffn(h2[:, None], lp, cfg)
+            y = y[:, 0]
+        else:
+            y = swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"])
+        x = x + y
+        x = shard(x, "act_batch", "act_embed")
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (L_bf16(params["layers"]), cache["k"],
+                                cache["v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"].astype(jnp.bfloat16))
+    logits = shard(logits, "act_batch", "act_vocab")
+    return logits, {"k": nk, "v": nv}
+
+
+def transformer_prefill(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                        image_embeds: jax.Array | None = None,
+                        q_chunk: int = 512, kv_chunk: int = 512):
+    """Prefill: single pass that emits the KV cache (the artifact a serving
+    system keeps) per scanned layer and last-position logits.
+
+    SWA archs keep only the last ``window`` positions, ring-buffer-aligned
+    with ``transformer_decode_step``'s slot convention (slot = pos % window).
+    """
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(cfg.d_model)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if image_embeds is not None:
+        x = jax.lax.dynamic_update_slice(x, image_embeds.astype(x.dtype),
+                                         (0, 0, 0))
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(xx, lp):
+        h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        kk = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        kk = rotary_embed(kk, positions, cfg.rope_theta)
+        vv = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        xx = _attn_block(xx, lp, cfg, positions, q_chunk, kv_chunk)
+        xx, _ = _ffn_block(xx, lp, cfg)
+        ck = kk.transpose(0, 2, 1, 3)      # [B, KH, S, hd]
+        cv = vv.transpose(0, 2, 1, 3)
+        if cfg.window and cfg.window < s:
+            w = cfg.window
+            ck = jnp.roll(ck[:, :, -w:], shift=s % w, axis=2)
+            cv = jnp.roll(cv[:, :, -w:], shift=s % w, axis=2)
+        ck = shard(ck.astype(jnp.bfloat16), "cache_batch", "cache_kv_heads",
+                   "cache_seq", "act_head_dim")
+        cv = shard(cv.astype(jnp.bfloat16), "cache_batch", "cache_kv_heads",
+                   "cache_seq", "act_head_dim")
+        return xx, (ck, cv)
+
+    x, (k_all, v_all) = jax.lax.scan(body, x, L_bf16(params["layers"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                        params["lm_head"].astype(jnp.bfloat16))
+    logits = shard(logits, "act_batch", "act_vocab")
+    return logits, {"k": k_all, "v": v_all}

@@ -1,0 +1,266 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings [B, S_enc, d_model].  The backbone is faithful:
+sinusoidal positions, pre-LN transformer encoder (bidirectional), decoder
+with causal self-attention + cross-attention, tied LM head on the decoder.
+
+train_4k:   S_enc = seq_len, S_dec = seq_len // decoder_ratio, seq2seq CE loss.
+prefill:    encode + decoder prefill over the prompt -> (self + cross caches).
+decode:     one decoder token against self cache (cache_len) + cross cache.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models.layers import (P, bf16_layers, cross_entropy,
+                                 flash_attention, init_params, param_axes,
+                                 rms_norm)
+from repro.models.transformer import _cache_positions, decode_attention
+from repro.parallel.sharding import shard
+
+
+def _hd(cfg):
+    return cfg.resolved_head_dim()
+
+
+def whisper_specs(cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, _hd(cfg)
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    le, ld = cfg.n_encoder_layers or cfg.n_layers, cfg.n_layers
+
+    def attn(L):
+        return {
+            "wq": P((L, d, h, hd), ("layers", "embed", "heads", "head_dim")),
+            "wk": P((L, d, kh, hd), ("layers", "embed", "kv_heads", "head_dim")),
+            "wv": P((L, d, kh, hd), ("layers", "embed", "kv_heads", "head_dim")),
+            "wo": P((L, h, hd, d), ("layers", "heads", "head_dim", "embed")),
+        }
+
+    def mlp(L):
+        return {
+            "w_in": P((L, d, cfg.d_ff), ("layers", "embed", "mlp")),
+            "w_out": P((L, cfg.d_ff, d), ("layers", "mlp", "embed")),
+        }
+
+    enc = {"ln1": P((le, d), ("layers", "embed"), "ones"),
+           "ln2": P((le, d), ("layers", "embed"), "ones"),
+           **attn(le), **mlp(le)}
+    dec = {"ln1": P((ld, d), ("layers", "embed"), "ones"),
+           "ln2": P((ld, d), ("layers", "embed"), "ones"),
+           "ln3": P((ld, d), ("layers", "embed"), "ones"),
+           **attn(ld),
+           "xwq": P((ld, d, h, hd), ("layers", "embed", "heads", "head_dim")),
+           "xwk": P((ld, d, kh, hd), ("layers", "embed", "kv_heads", "head_dim")),
+           "xwv": P((ld, d, kh, hd), ("layers", "embed", "kv_heads", "head_dim")),
+           "xwo": P((ld, h, hd, d), ("layers", "heads", "head_dim", "embed")),
+           **mlp(ld)}
+    return {
+        "embed": P((cfg.vocab_size, d), ("vocab", "embed"), "embed", scale=0.02),
+        "ln_enc": P((d,), ("embed",), "ones"),
+        "ln_dec": P((d,), ("embed",), "ones"),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def init_whisper(key, cfg: ArchConfig, dtype=jnp.float32):
+    return init_params(key, whisper_specs(cfg), dtype)
+
+
+def whisper_axes(cfg: ArchConfig):
+    return param_axes(whisper_specs(cfg))
+
+
+def _sinusoid(s: int, d: int) -> jax.Array:
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _gelu_mlp(x, lp, cfg):
+    h = rms_norm(x, lp["ln2"] if "ln3" not in lp else lp["ln3"], cfg.norm_eps)
+    y = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, lp["w_in"]))
+    y = shard(y, "act_batch", "act_seq", "act_mlp")
+    return x + shard(jnp.einsum("bsf,fd->bsd", y, lp["w_out"]),
+                     "act_batch", "act_seq", "act_embed")
+
+
+def _self_attn(x, lp, cfg, causal, q_chunk=512, kv_chunk=512):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    q = shard(q, "act_batch", "act_seq", "act_heads", "act_head_dim")
+    o = flash_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk)
+    return x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"])
+
+
+def _cross_attn(x, enc_out, lp, cfg, q_chunk=512, kv_chunk=512):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["xwq"])
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xwk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xwv"])
+    q = shard(q, "act_batch", "act_seq", "act_heads", "act_head_dim")
+    o = flash_attention(q, k, v, causal=False, q_chunk=q_chunk,
+                        kv_chunk=kv_chunk)
+    return x + jnp.einsum("bshk,hkd->bsd", o, lp["xwo"])
+
+
+def whisper_encode(params, cfg: ArchConfig, frames: jax.Array,
+                   remat: bool = True) -> jax.Array:
+    """frames [B, S_enc, d] (stub frontend output) -> encoder states."""
+    b, s, d = frames.shape
+    x = (frames + _sinusoid(s, d)[None]).astype(jnp.bfloat16)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(xx, lp):
+        xx = _self_attn(xx, lp, cfg, causal=False)
+        xx = _gelu_mlp(xx, lp, cfg)
+        return xx, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, bf16_layers(params["encoder"]))
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def whisper_decoder_logits(params, cfg: ArchConfig, tokens: jax.Array,
+                           enc_out: jax.Array, remat: bool = True):
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(d)
+    x = (x + _sinusoid(s, d)[None].astype(jnp.bfloat16))
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(xx, lp):
+        xx = _self_attn(xx, lp, cfg, causal=True)
+        xx = _cross_attn(xx, enc_out, lp, cfg)
+        xx = _gelu_mlp(xx, lp, cfg)
+        return xx, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, bf16_layers(params["decoder"]))
+    x = rms_norm(x, params["ln_dec"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        params["embed"].astype(jnp.bfloat16))  # tied head
+    return shard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def whisper_loss(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    enc_out = whisper_encode(params, cfg, batch["frames"])
+    toks = batch["tokens"]
+    logits = whisper_decoder_logits(params, cfg, toks[:, :-1], enc_out)
+    return cross_entropy(logits, toks[:, 1:])
+
+
+# ------------------------------------------------------------------ decode
+
+def whisper_cache_spec(cfg: ArchConfig, batch: int, cache_len: int):
+    hd = _hd(cfg)
+    ld = cfg.n_layers
+    self_shape = (ld, batch, cfg.n_kv_heads, cache_len, hd)
+    cross_shape = (ld, batch, cfg.n_kv_heads, cfg.cross_len, hd)
+    ax = ("layers", "cache_batch", "cache_kv_heads", "cache_seq",
+          "act_head_dim")
+    cax = ("layers", "cache_batch", "cache_kv_heads", "act_seq", "act_head_dim")
+    return ({"k": jax.ShapeDtypeStruct(self_shape, jnp.bfloat16),
+             "v": jax.ShapeDtypeStruct(self_shape, jnp.bfloat16),
+             "xk": jax.ShapeDtypeStruct(cross_shape, jnp.bfloat16),
+             "xv": jax.ShapeDtypeStruct(cross_shape, jnp.bfloat16)},
+            {"k": ax, "v": ax, "xk": cax, "xv": cax})
+
+
+def init_whisper_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    spec, _ = whisper_cache_spec(cfg, batch, cache_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def whisper_decode_step(params, cfg: ArchConfig, cache: dict,
+                        tokens: jax.Array, pos: jax.Array,
+                        attn_impl=decode_attention):
+    b = tokens.shape[0]
+    d = cfg.d_model
+    clen = cache["k"].shape[3]
+    slot_pos = _cache_positions(cfg, clen, pos)
+    cross_pos = jnp.arange(cache["xk"].shape[3])
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(d)
+    x = x + _sinusoid_at(pos, d).astype(jnp.bfloat16)
+
+    def body(xx, layer_in):
+        lp, ck, cv, xk, xv = layer_in
+        h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, lp["wq"])
+        k_new = jnp.einsum("bd,dhk->bhk", h, lp["wk"])
+        v_new = jnp.einsum("bd,dhk->bhk", h, lp["wv"])
+        ck = jax.lax.dynamic_update_slice(ck, k_new.astype(ck.dtype)[:, :, None],
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_new.astype(cv.dtype)[:, :, None],
+                                          (0, 0, pos, 0))
+        o = attn_impl(q, ck, cv, slot_pos, pos, None)
+        xx = xx + jnp.einsum("bhk,hkd->bd", o, lp["wo"])
+        # cross attention against the (precomputed) encoder cache
+        h2 = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+        q2 = jnp.einsum("bd,dhk->bhk", h2, lp["xwq"])
+        o2 = attn_impl(q2, xk, xv, cross_pos, jnp.asarray(2**30, jnp.int32),
+                       None)
+        xx = xx + jnp.einsum("bhk,hkd->bd", o2, lp["xwo"])
+        h3 = rms_norm(xx, lp["ln3"], cfg.norm_eps)
+        y = jax.nn.gelu(jnp.einsum("bd,df->bf", h3, lp["w_in"]))
+        xx = xx + jnp.einsum("bf,fd->bd", y, lp["w_out"])
+        return xx, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (bf16_layers(params["decoder"]), cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = rms_norm(x, params["ln_dec"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x, params["embed"].astype(jnp.bfloat16))
+    new_cache = dict(cache)
+    new_cache.update({"k": nk, "v": nv})
+    return shard(logits, "act_batch", "act_vocab"), new_cache
+
+
+def _sinusoid_at(pos: jax.Array, d: int) -> jax.Array:
+    i = jnp.arange(d // 2).astype(jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+
+
+def whisper_prefill(params, cfg: ArchConfig, frames: jax.Array,
+                    tokens: jax.Array):
+    """Encode frames + prefill the decoder prompt.  Returns (last logits,
+    cache dict with self-cache filled to len(tokens) and cross caches)."""
+    enc_out = whisper_encode(params, cfg, frames, remat=False)
+    b, s = tokens.shape
+    d = cfg.d_model
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(d)
+    x = x + _sinusoid(s, d)[None].astype(jnp.bfloat16)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+
+    def body(xx, lp):
+        h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+        kk = jnp.einsum("bsd,dhk->bshk", h, lp["wk"]).transpose(0, 2, 1, 3)
+        vv = jnp.einsum("bsd,dhk->bshk", h, lp["wv"]).transpose(0, 2, 1, 3)
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["xwk"]).transpose(0, 2, 1, 3)
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        lp["xwv"]).transpose(0, 2, 1, 3)
+        xx = _self_attn(xx, lp, cfg, causal=True)
+        xx = _cross_attn(xx, enc_out, lp, cfg)
+        xx = _gelu_mlp(xx, lp, cfg)
+        return xx, (kk.astype(jnp.bfloat16), vv.astype(jnp.bfloat16),
+                    xk.astype(jnp.bfloat16), xv.astype(jnp.bfloat16))
+
+    x, (k, v, xk, xv) = jax.lax.scan(body, x,
+                                     bf16_layers(params["decoder"]))
+    x = rms_norm(x, params["ln_dec"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                        params["embed"].astype(jnp.bfloat16))
+    return (shard(logits, "act_batch", "act_vocab"),
+            {"k": k, "v": v, "xk": xk, "xv": xv})

@@ -1,0 +1,241 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block applied
+every ``hybrid_period`` SSM layers (arXiv:2411.15242).
+
+The shared block's weights are a single parameter set reused at every
+application (Zamba's signature trick — attention capacity at ~1/9 of the
+parameter cost); each application keeps its own KV cache.
+Structure: reshape the 54 stacked mamba layers into (n_outer, period) and
+scan over outer groups; the body scans the inner mamba layers then applies
+the shared attention+FFN block.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig
+from repro.models.layers import (P, bf16_layers, cross_entropy,
+                                 flash_attention, init_params, param_axes,
+                                 rms_norm, rotary_embed, swiglu)
+from repro.models.mamba2 import (init_mamba2_cache, mamba2_block,
+                                 mamba2_block_decode, mamba2_cache_spec,
+                                 mamba2_layer_specs)
+from repro.models.transformer import _cache_positions, decode_attention
+from repro.parallel.sharding import shard
+
+
+def _outer(cfg: ArchConfig) -> tuple[int, int]:
+    period = cfg.hybrid_period
+    assert cfg.n_layers % period == 0
+    return cfg.n_layers // period, period
+
+
+def zamba2_specs(cfg: ArchConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    shared = {
+        "ln1": P((d,), ("embed",), "ones"),
+        "ln2": P((d,), ("embed",), "ones"),
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, kh, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed")),
+        "w_gate": P((d, cfg.d_ff), ("embed", "mlp")),
+        "w_up": P((d, cfg.d_ff), ("embed", "mlp")),
+        "w_down": P((cfg.d_ff, d), ("mlp", "embed")),
+    }
+    return {
+        "embed": P((cfg.vocab_size, d), ("vocab", "embed"), "embed", scale=0.02),
+        "lm_head": P((d, cfg.vocab_size), ("embed", "vocab")),
+        "ln_f": P((d,), ("embed",), "ones"),
+        "mamba": mamba2_layer_specs(cfg),
+        "shared": shared,
+    }
+
+
+def init_zamba2(key, cfg: ArchConfig, dtype=jnp.float32):
+    return init_params(key, zamba2_specs(cfg), dtype)
+
+
+def zamba2_axes(cfg: ArchConfig):
+    return param_axes(zamba2_specs(cfg))
+
+
+def _shared_block(x, sp, cfg: ArchConfig, positions, q_chunk=512, kv_chunk=512):
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, sp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, sp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, sp["wv"])
+    q = rotary_embed(q, positions, cfg.rope_theta)
+    k = rotary_embed(k, positions, cfg.rope_theta)
+    q = shard(q, "act_batch", "act_seq", "act_heads", "act_head_dim")
+    o = flash_attention(q, k, v, causal=True, window=cfg.window,
+                        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, sp["wo"])
+    h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = x + swiglu(h2, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return shard(x, "act_batch", "act_seq", "act_embed")
+
+
+def _group_params(params, cfg: ArchConfig):
+    n_outer, period = _outer(cfg)
+    return jax.tree.map(
+        lambda a: a.reshape(n_outer, period, *a.shape[1:]),
+        bf16_layers(params["mamba"]))
+
+
+def zamba2_logits(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                  remat: bool = True) -> jax.Array:
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(cfg.d_model)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    grouped = _group_params(params, cfg)
+    shared = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params["shared"])
+
+    def outer_body(xx, group):
+        def inner(xi, lp):
+            xi, _ = mamba2_block(xi, lp, cfg)
+            return xi, None
+
+        xx, _ = jax.lax.scan(inner, xx, group)
+        xx = _shared_block(xx, shared, cfg, positions)
+        return xx, None
+
+    body = jax.checkpoint(outer_body) if remat else outer_body
+    x, _ = jax.lax.scan(body, x, grouped)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(jnp.bfloat16))
+    return shard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def zamba2_loss(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    toks = batch["tokens"]
+    logits = zamba2_logits(params, cfg, toks[:, :-1])
+    return cross_entropy(logits, toks[:, 1:])
+
+
+def zamba2_prefill(params: dict, cfg: ArchConfig, tokens: jax.Array):
+    """Full forward collecting the decode cache: per-layer SSM states, conv
+    tail (zero stand-in, as in mamba2 prefill — documented), and the shared
+    block's KV per application.  Returns (last-token logits, cache)."""
+    n_outer, period = _outer(cfg)
+    b, s = tokens.shape
+    hd = cfg.resolved_head_dim()
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(cfg.d_model)
+    x = shard(x, "act_batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    grouped = _group_params(params, cfg)
+    shared = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params["shared"])
+
+    def outer_body(xx, group):
+        def inner(xi, lp):
+            xi, state = mamba2_block(xi, lp, cfg)
+            return xi, state
+
+        xx, states = jax.lax.scan(inner, xx, group)
+        h = rms_norm(xx, shared["ln1"], cfg.norm_eps)
+        kk = jnp.einsum("bsd,dhk->bshk", h, shared["wk"])
+        kk = rotary_embed(kk, positions, cfg.rope_theta)
+        vv = jnp.einsum("bsd,dhk->bshk", h, shared["wv"])
+        xx = _shared_block(xx, shared, cfg, positions)
+        ck = kk.transpose(0, 2, 1, 3).astype(jnp.bfloat16)
+        cv = vv.transpose(0, 2, 1, 3).astype(jnp.bfloat16)
+        return xx, (states, ck, cv)
+
+    x, (ssm, ck, cv) = jax.lax.scan(outer_body, x, grouped)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                        params["lm_head"].astype(jnp.bfloat16))
+    d_in = cfg.ssm_expand * cfg.d_model
+    cw = cfg.ssm_conv_width
+    cache = {
+        "ssm": ssm.reshape(cfg.n_layers, *ssm.shape[2:]).astype(jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, b, cw - 1, d_in), jnp.bfloat16),
+        "attn_k": ck, "attn_v": cv,
+    }
+    return shard(logits, "act_batch", "act_vocab"), cache
+
+
+# ------------------------------------------------------------------ decode
+
+def zamba2_cache_spec(cfg: ArchConfig, batch: int, cache_len: int):
+    n_outer, _ = _outer(cfg)
+    hd = cfg.resolved_head_dim()
+    mspec, maxes = mamba2_cache_spec(cfg, batch)
+    kv_shape = (n_outer, batch, cfg.n_kv_heads, cache_len, hd)
+    kv_axes = ("layers", "cache_batch", "cache_kv_heads", "cache_seq",
+               "act_head_dim")
+    spec = dict(mspec)
+    spec["attn_k"] = jax.ShapeDtypeStruct(kv_shape, jnp.bfloat16)
+    spec["attn_v"] = jax.ShapeDtypeStruct(kv_shape, jnp.bfloat16)
+    axes = dict(maxes)
+    axes["attn_k"] = kv_axes
+    axes["attn_v"] = kv_axes
+    return spec, axes
+
+
+def init_zamba2_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    spec, _ = zamba2_cache_spec(cfg, batch, cache_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def zamba2_decode_step(params: dict, cfg: ArchConfig, cache: dict,
+                       tokens: jax.Array, pos: jax.Array,
+                       attn_impl=decode_attention):
+    n_outer, period = _outer(cfg)
+    b = tokens.shape[0]
+    clen = cache["attn_k"].shape[3]
+    slot = pos
+    slot_pos = _cache_positions(cfg, clen, pos)
+    x = params["embed"][tokens].astype(jnp.bfloat16) * math.sqrt(cfg.d_model)
+    shared = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params["shared"])
+    grouped = _group_params(params, cfg)
+    g_ssm = jax.tree.map(
+        lambda a: a.reshape(n_outer, period, *a.shape[1:]), cache["ssm"])
+    g_conv = jax.tree.map(
+        lambda a: a.reshape(n_outer, period, *a.shape[1:]), cache["conv"])
+
+    def outer_body(xx, group_in):
+        lp_group, ssm_g, conv_g, ck, cv = group_in
+
+        def inner(xi, layer_in):
+            lp, ssm, conv = layer_in
+            xi, s2, c2 = mamba2_block_decode(xi, lp, cfg, ssm, conv)
+            return xi, (s2, c2)
+
+        xx, (ssm2, conv2) = jax.lax.scan(inner, xx, (lp_group, ssm_g, conv_g))
+        # shared attention (decode step)
+        sp = shared
+        h = rms_norm(xx, sp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, sp["wq"])
+        k_new = jnp.einsum("bd,dhk->bhk", h, sp["wk"])
+        v_new = jnp.einsum("bd,dhk->bhk", h, sp["wv"])
+        posb = jnp.broadcast_to(pos, (b, 1))
+        q = rotary_embed(q[:, None], posb, cfg.rope_theta)[:, 0]
+        k_new = rotary_embed(k_new[:, None], posb, cfg.rope_theta)[:, 0]
+        ck = jax.lax.dynamic_update_slice(
+            ck, k_new.astype(ck.dtype)[:, :, None], (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v_new.astype(cv.dtype)[:, :, None], (0, 0, slot, 0))
+        o = attn_impl(q, ck, cv, slot_pos, pos, cfg.window)
+        xx = xx + jnp.einsum("bhk,hkd->bd", o, sp["wo"])
+        h2 = rms_norm(xx, sp["ln2"], cfg.norm_eps)
+        xx = xx + swiglu(h2, sp["w_gate"], sp["w_up"], sp["w_down"])
+        return xx, (ssm2, conv2, ck, cv)
+
+    x, (ssm, conv, ak, av) = jax.lax.scan(
+        outer_body, x,
+        (grouped, g_ssm, g_conv, cache["attn_k"], cache["attn_v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"].astype(jnp.bfloat16))
+    new_cache = {
+        "ssm": ssm.reshape(cfg.n_layers, *ssm.shape[2:]),
+        "conv": conv.reshape(cfg.n_layers, *conv.shape[2:]),
+        "attn_k": ak, "attn_v": av,
+    }
+    return shard(logits, "act_batch", "act_vocab"), new_cache

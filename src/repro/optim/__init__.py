@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.optim.compress import (CompressionConfig, compress_gradients,  # noqa: F401
+                                  decompress_gradients)

@@ -1,0 +1,68 @@
+"""AdamW with decoupled weight decay + global-norm clipping.
+
+Pure-pytree implementation (no optax dependency).  Optimizer state inherits
+the parameters' sharding (moments are elementwise), so under the FSDP rules
+the full Adam state is sharded — ZeRO-3 for free via pjit out_shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, opt_state, grads):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+    step = opt_state["step"] + 1
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, opt_state["m"], grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g,
+                     opt_state["v"], grads)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(p, mm, vv):
+        mhat = mm / bc1
+        vhat = vv / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

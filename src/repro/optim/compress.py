@@ -1,0 +1,70 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized gradients for the data-parallel all-reduce path: 4x less
+DCN/ICI traffic on the ``pod``/``data`` axes.  Error feedback (Seide et al.;
+EF-SGD) accumulates the quantization residual locally so the compressed
+update is unbiased over time — convergence-safe.
+
+Used by engine/train_loop when ``CompressionConfig.enabled``: gradients are
+compressed, (all-reduced in compressed form across pods in a real deployment;
+here the compression happens before the pjit-visible reduction so the HLO
+collective moves int8), then decompressed + residual-corrected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    block: int = 256          # per-block scale granularity
+
+
+def _leaf_compress(g: jax.Array, block: int):
+    flat = g.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _leaf_decompress(q: jax.Array, scale: jax.Array, shape, size):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress_gradients(grads, residual, cfg: CompressionConfig):
+    """(grads + residual) -> (compressed pytree, new residual)."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _leaf_compress(x, cfg.block)
+        approx = _leaf_decompress(q, s, g.shape, g.size)
+        return (q, s), x - approx
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree.unflatten(tree, [o[0] for o in outs])
+    new_res = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return comp, new_res
+
+
+def decompress_gradients(comp, grads_like):
+    flat_c = jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, tuple))
+    flat_g, tree = jax.tree.flatten(grads_like)
+    outs = [_leaf_decompress(q, s, g.shape, g.size)
+            for (q, s), g in zip(flat_c, flat_g)]
+    return jax.tree.unflatten(tree, outs)
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

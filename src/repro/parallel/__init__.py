@@ -1,0 +1,13 @@
+from repro.parallel.sharding import (  # noqa: F401
+    ShardingRules,
+    TRAIN_RULES,
+    DECODE_RULES,
+    DECODE_RULES_SP,
+    activate,
+    active_mesh,
+    logical_spec,
+    named_sharding,
+    shard,
+)
+from repro.parallel.decode import make_sp_attention, sp_cache_update  # noqa: F401
+from repro.parallel.pipeline import pipeline_forward, sequential_reference  # noqa: F401

@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Weights and activations are annotated with *logical* axis names
+(models/layers.py docstring); a :class:`ShardingRules` table maps them onto
+physical mesh axes.  Rules degrade gracefully: a mapping is dropped when the
+mesh lacks the axis or the dimension is not divisible by the axis size, so
+the same model code runs on a 1-device CPU test, a 16x16 pod, or a 2x16x16
+multi-pod mesh.
+
+Conventions (production mesh ("pod","data","model")):
+  batch        -> ("pod", "data")     pure DP across pods (DCN) and within pod
+  weight embed -> "data"              FSDP / ZeRO-3: params+optimizer sharded,
+                                      all-gathered per scanned layer
+  heads/mlp/vocab/experts -> "model"  TP / EP over ICI
+  cache_seq    -> "model"             sequence-parallel decode (flash-decode)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+AxisMap = dict[str, Any]  # logical name -> mesh axis | tuple | None
+
+TRAIN_RULES: AxisMap = {
+    # weights
+    "layers": None, "embed": "data", "heads": "model", "kv_heads": "model",
+    "head_dim": None, "mlp": "model", "vocab": "model",
+    # experts: EP over model; the per-expert d dim is FSDP-sharded over data
+    # (without it qwen3's 227B expert params sit at 57 GB f32/device) — the
+    # shard_map MoE's in_specs trigger the per-layer FSDP gather
+    "experts": "model", "expert_mlp": "model", "expert_embed": "data",
+    "ssm_inner": "model", "ssm_state": None, "ssm_heads": "model",
+    "conv_width": None,
+    # activations
+    "act_batch": ("pod", "data"), "act_seq": None, "act_embed": None,
+    "act_heads": "model", "act_kv_heads": "model", "act_head_dim": None,
+    "act_mlp": "model", "act_vocab": "model",
+    "act_experts": "model", "act_expert_cap": ("pod", "data"),
+    "act_ssm_inner": "model", "act_ssm_state": None, "act_ssm_heads": "model",
+    # kv cache (decode)
+    "cache_batch": ("pod", "data"), "cache_seq": None, "cache_kv_heads": "model",
+}
+
+# decode: batch on data axes; baseline replicates cache seq (cache_seq=None),
+# kv heads on model when divisible.  The SP flash-decode path (hillclimb)
+# activates DECODE_RULES_SP instead.
+DECODE_RULES: AxisMap = dict(TRAIN_RULES)
+
+DECODE_RULES_SP: AxisMap = {**TRAIN_RULES,
+                            "cache_seq": "model", "cache_kv_heads": None,
+                            "act_kv_heads": None}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    rules: AxisMap
+
+    def spec(self, axes: tuple[str | None, ...],
+             dims: tuple[int, ...] | None = None) -> PartitionSpec:
+        """PartitionSpec for a tuple of logical axis names; drops mappings the
+        mesh can't honor (missing axis / non-divisible dim)."""
+        parts, used = [], set()
+        for i, name in enumerate(axes):
+            target = self.rules.get(name) if name else None
+            if target is None:
+                parts.append(None)
+                continue
+            tgt = tuple(t for t in ((target,) if isinstance(target, str) else target)
+                        if t in self.mesh.axis_names and t not in used)
+            if not tgt:
+                parts.append(None)
+                continue
+            size = 1
+            for t in tgt:
+                size *= self.mesh.shape[t]
+            if dims is not None and dims[i] % size != 0:
+                # try a prefix that divides
+                tgt2 = []
+                size = 1
+                for t in tgt:
+                    if dims[i] % (size * self.mesh.shape[t]) == 0:
+                        tgt2.append(t)
+                        size *= self.mesh.shape[t]
+                tgt = tuple(tgt2)
+                if not tgt:
+                    parts.append(None)
+                    continue
+            used.update(tgt)
+            parts.append(tgt[0] if len(tgt) == 1 else tgt)
+        return PartitionSpec(*parts)
+
+    def sharding(self, axes: tuple[str | None, ...],
+                 dims: tuple[int, ...] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes, dims))
+
+
+_local = threading.local()
+
+
+def activate(mesh: Mesh, rules: AxisMap):
+    """Context manager installing rules for `shard()` constraints."""
+
+    @contextlib.contextmanager
+    def ctx():
+        prev = getattr(_local, "rules", None)
+        _local.rules = ShardingRules(mesh, rules)
+        try:
+            with mesh:
+                yield _local.rules
+        finally:
+            _local.rules = prev
+
+    return ctx()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_local, "rules", None)
+
+
+def active_mesh() -> Mesh | None:
+    r = current_rules()
+    return r.mesh if r else None
+
+
+def logical_spec(axes, dims=None) -> PartitionSpec:
+    r = current_rules()
+    if r is None:
+        return PartitionSpec()
+    return r.spec(tuple(axes), dims)
+
+
+def named_sharding(axes, dims=None) -> NamedSharding | None:
+    r = current_rules()
+    if r is None:
+        return None
+    return r.sharding(tuple(axes), dims)
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without active rules)."""
+    r = current_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, r.sharding(tuple(axes), tuple(x.shape)))
+
+
+def tree_param_shardings(rules: ShardingRules, axes_tree, shapes_tree):
+    """NamedSharding pytree for params given their logical axes + shapes."""
+    return jax.tree.map(
+        lambda ax, shp: rules.sharding(tuple(ax), tuple(shp.shape)),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

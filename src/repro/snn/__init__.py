@@ -1,0 +1,1 @@
+from repro.snn.mlp import SNNConfig, init_snn, snn_forward, snn_loss, train_snn  # noqa: F401

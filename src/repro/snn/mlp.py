@@ -1,0 +1,108 @@
+"""Spiking MLPs — the paper's evaluation models (§IV-A, Table I).
+
+  N-MNIST:      in -> 200 -> 100 -> 40  -> 10   (0.49 M params)
+  CIFAR10-DVS:  in -> 1000 -> 500 -> 200 -> 100 -> 10  (33.4 M params)
+
+Surrogate-gradient training (SNNTorch-style [31]) with rate decoding:
+classification by output-layer spike counts; cross-entropy on the counts.
+Time-major spike inputs ``[T, B, n_in]``; `lax.scan` over T.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams, lif_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    layer_sizes: tuple[int, ...]       # (in, h1, ..., out)
+    lif: LIFParams = LIFParams(beta=0.9, threshold=1.0)
+    num_steps: int = 25
+
+    @staticmethod
+    def nmnist(n_in: int = 2 * 34 * 34) -> "SNNConfig":
+        return SNNConfig(layer_sizes=(n_in, 200, 100, 40, 10))
+
+    @staticmethod
+    def cifar10_dvs(n_in: int = 2 * 128 * 128) -> "SNNConfig":
+        return SNNConfig(layer_sizes=(n_in, 1000, 500, 200, 100, 10))
+
+
+def init_snn(key: jax.Array, cfg: SNNConfig) -> list[jax.Array]:
+    """Kaiming-ish init; weights only (the hardware has no bias path)."""
+    params = []
+    sizes = cfg.layer_sizes
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (sizes[i], sizes[i + 1])) * jnp.sqrt(2.0 / sizes[i])
+        params.append(w)
+    return params
+
+
+def snn_forward(params: list[jax.Array], spikes: jax.Array, cfg: SNNConfig):
+    """spikes: [T, B, n_in] -> (out_counts [B, n_out], out_spikes [T, B, n_out])."""
+
+    def step(carry, s_t):
+        vs = carry
+        x = s_t
+        new_vs = []
+        for w, v in zip(params, vs):
+            i_t = x @ w
+            v2, x = lif_step(v, i_t, cfg.lif)
+            new_vs.append(v2)
+        return new_vs, x
+
+    batch = spikes.shape[1]
+    v0 = [jnp.zeros((batch, w.shape[1])) for w in params]
+    _, out_spikes = jax.lax.scan(step, v0, spikes)
+    return out_spikes.sum(axis=0), out_spikes
+
+
+def snn_loss(params, spikes, labels, cfg: SNNConfig):
+    counts, _ = snn_forward(params, spikes, cfg)
+    logits = counts  # rate code: counts are the logits
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, acc
+
+
+@partial(jax.jit, static_argnames=("cfg", "lr"))
+def _train_step(params, opt_state, spikes, labels, cfg: SNNConfig, lr: float):
+    (loss, acc), grads = jax.value_and_grad(snn_loss, has_aux=True)(
+        params, spikes, labels, cfg)
+    # Adam
+    m, v, t = opt_state
+    t = t + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
+                          params, mh, vh)
+    return params, (m, v, t), loss, acc
+
+
+def train_snn(key: jax.Array, cfg: SNNConfig, data_iter, steps: int,
+              lr: float = 1e-3, log_every: int = 50, params=None):
+    """Train with the paper's lr=1e-3 Adam.  data_iter yields (spikes, labels)."""
+    if params is None:
+        params = init_snn(key, cfg)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    opt_state = (m, v, jnp.zeros((), jnp.int32))
+    history = []
+    for step in range(steps):
+        spikes, labels = next(data_iter)
+        params, opt_state, loss, acc = _train_step(
+            params, opt_state, spikes, labels, cfg, lr)
+        if step % log_every == 0 or step == steps - 1:
+            history.append((step, float(loss), float(acc)))
+    return params, history

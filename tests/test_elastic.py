@@ -1,0 +1,57 @@
+"""Elastic scaling end-to-end: train on an 8-device mesh, checkpoint,
+resume on a 4-device mesh (different sharding), continue training — the
+full launcher-level restart path."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os, sys
+devices, ckpt, phase = int(sys.argv[1]), sys.argv[2], sys.argv[3]
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.engine.train_loop import (TrainLoopConfig, init_train_state,
+                                     make_train_step, resume_or_init,
+                                     train_loop)
+from repro.optim.adamw import AdamWConfig
+from repro.parallel.sharding import TRAIN_RULES, activate
+from repro.data.tokens import TokenPipelineConfig, token_batch
+
+cfg = get_smoke_config("internlm2_1_8b")
+bundle = build_model(cfg)
+data_cfg = TokenPipelineConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                               global_batch=8)
+mesh = jax.make_mesh((devices // 2, 2), ("data", "model"))
+opt = AdamWConfig(lr=1e-3, warmup_steps=1)
+with activate(mesh, TRAIN_RULES):
+    params = bundle.init(jax.random.key(0))
+    state = init_train_state(None, params, opt).as_tree()
+    step_fn = jax.jit(make_train_step(bundle.loss, opt))
+    loop_cfg = TrainLoopConfig(steps=10 if phase == "a" else 20,
+                               checkpoint_every=10, checkpoint_dir=ckpt,
+                               log_every=1000)
+    state, start = resume_or_init(loop_cfg, state)
+    if phase == "b":
+        assert start == 10, start          # resumed across mesh sizes
+    def batch_fn(step):
+        return {"tokens": jnp.asarray(token_batch(data_cfg, step)["tokens"])}
+    state, hist = train_loop(state, step_fn, batch_fn, loop_cfg,
+                             start_step=start, log_fn=lambda s: None)
+print("OK", phase, float(hist["loss"][-1]))
+"""
+
+
+def test_elastic_restart_8_to_4_devices(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    for devices, phase in ((8, "a"), (4, "b")):
+        p = subprocess.run(
+            [sys.executable, "-c", SCRIPT, str(devices), str(tmp_path),
+             phase],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+        assert p.returncode == 0, (p.stdout[-1500:], p.stderr[-4000:])
+        assert f"OK {phase}" in p.stdout

@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import (c2c_matmul_ladder_ref, c2c_matmul_ref,
+                               event_synapse_ref, lif_update_ref)
+
+
+# ------------------------------------------------------------ event_synapse
+
+@pytest.mark.parametrize("n_src,n_dest,block_d", [
+    (16, 128, 128), (40, 512, 256), (100, 256, 64), (7, 384, 128),
+])
+def test_event_synapse_shapes(rng, n_src, n_dest, block_d):
+    w = jnp.asarray(rng.normal(size=(n_src, n_dest)).astype(np.float32))
+    spikes = jnp.asarray((rng.random((3, n_src)) < 0.3).astype(np.float32))
+    ev = ops.events_from_spikes(spikes, max_events=n_src)
+    out = ops.event_synapse(ev, w, block_d=block_d)
+    np.testing.assert_allclose(out, event_synapse_ref(ev, w), atol=1e-5)
+
+
+def test_event_synapse_all_padding(rng):
+    w = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    ev = jnp.full((2, 4), -1, jnp.int32)
+    out = ops.event_synapse(ev, w)
+    assert np.all(np.asarray(out) == 0)
+
+
+def test_events_from_spikes_roundtrip(rng):
+    spikes = jnp.asarray((rng.random((5, 32)) < 0.4).astype(np.float32))
+    ev = ops.events_from_spikes(spikes, max_events=32)
+    for b in range(5):
+        got = sorted(int(i) for i in np.asarray(ev[b]) if i >= 0)
+        want = sorted(np.nonzero(np.asarray(spikes[b]))[0].tolist())
+        assert got == want
+
+
+def test_event_overflow_counting(rng):
+    spikes = jnp.ones((1, 32))
+    assert int(ops.overflow_count(spikes, 10)[0]) == 22
+    ev = ops.events_from_spikes(spikes, 10)
+    assert np.all(np.asarray(ev) >= 0) and ev.shape == (1, 10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), density=st.floats(0.0, 0.9))
+def test_event_synapse_property(seed, density):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(24, 256)).astype(np.float32))
+    spikes = jnp.asarray((rng.random((2, 24)) < density).astype(np.float32))
+    ev = ops.events_from_spikes(spikes, max_events=24)
+    out = ops.event_synapse(ev, w)
+    # equivalence with the dense matmul (the A-SYN contract)
+    np.testing.assert_allclose(out, spikes @ w, atol=1e-4)
+
+
+# ---------------------------------------------------------------- lif_update
+
+@pytest.mark.parametrize("shape,block", [
+    ((8, 512), (8, 512)), ((16, 1024), (8, 256)), ((4, 128), (2, 128)),
+])
+def test_lif_update_shapes(rng, shape, block):
+    v = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    i = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    vn, s = ops.lif_update(v, i, beta=0.85, threshold=0.7, v_reset=0.1,
+                           block=block)
+    vr, sr = lif_update_ref(v, i, 0.85, 0.7, 0.1)
+    np.testing.assert_allclose(vn, vr, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+
+
+def test_lif_update_matches_core_lif(rng):
+    """Kernel forward == core.lif.lif_step forward (shared convention)."""
+    from repro.core.lif import LIFParams, lif_step
+    p = LIFParams(beta=0.9, threshold=1.0, v_reset=0.0)
+    v = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))
+    i = jnp.asarray(rng.normal(size=(4, 256)).astype(np.float32))
+    vn_k, s_k = ops.lif_update(v, i, beta=p.beta, threshold=p.threshold,
+                               v_reset=p.v_reset, block=(4, 256))
+    vn_c, s_c = lif_step(v, i, p)
+    np.testing.assert_allclose(vn_k, vn_c, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_c))
+
+
+# ---------------------------------------------------------------- c2c_matmul
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (128, 256, 384, 128, 128, 128),
+    (64, 128, 128, 64, 64, 128),
+    (256, 512, 256, 128, 256, 128),
+])
+def test_c2c_matmul_shapes(rng, m, k, n, bm, bk, bn):
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    wq = jnp.asarray(rng.integers(-127, 128, size=(k, n)).astype(np.int8))
+    scale = jnp.float32(0.02)
+    out = ops.c2c_matmul(x, wq, scale, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(out, c2c_matmul_ref(x, wq, scale),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_c2c_matmul_equals_ideal_ladder(rng):
+    """Kernel == bit-serial C2C ladder evaluation (paper eq. (2))."""
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    wq = jnp.asarray(rng.integers(-127, 128, size=(128, 128)).astype(np.int8))
+    scale = jnp.float32(0.013)
+    out = ops.c2c_matmul(x, wq, scale, bm=64, bk=128, bn=128)
+    np.testing.assert_allclose(out, c2c_matmul_ladder_ref(x, wq, scale),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_c2c_matmul_int8_extremes():
+    x = jnp.ones((8, 128), jnp.float32)
+    wq = jnp.full((128, 128), -128, jnp.int8)
+    out = ops.c2c_matmul(x, wq, jnp.float32(1.0), bm=8)
+    np.testing.assert_allclose(out, x @ (wq.astype(jnp.float32)), rtol=1e-5)

@@ -1,0 +1,68 @@
+"""A-NEURON behaviour (paper §III-A, Fig. 5): integrate, fire, reset, leak."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lif import (LIFParams, lif_rollout, lif_step, rate_encode,
+                            spike_fn)
+
+
+def test_integrate_and_fire_waveform():
+    """Constant sub-threshold current accumulates, crosses V_th, fires once,
+    resets — the Fig. 5 waveform shape."""
+    p = LIFParams(beta=1.0, threshold=1.0, v_reset=0.0)  # no leak
+    currents = jnp.full((10, 1), 0.3)
+    spikes, vtrace = lif_rollout(currents, p)
+    v = np.asarray(vtrace)[:, 0]
+    s = np.asarray(spikes)[:, 0]
+    # V: .3 .6 .9 -> fire at 1.2 (>=1) -> reset to 0
+    assert s[0] == 0 and s[1] == 0 and s[2] == 0
+    assert s[3] == 1
+    assert v[3] == 0.0            # reset after fire
+    assert np.isclose(v[2], 0.9, atol=1e-6)
+
+
+def test_leak_discharges_between_steps():
+    p = LIFParams(beta=0.5, threshold=10.0)
+    currents = jnp.zeros((4, 1))
+    _, vtrace = lif_rollout(currents, p, v0=jnp.ones((1,)) * 8.0)
+    v = np.asarray(vtrace)[:, 0]
+    assert np.allclose(v, [4.0, 2.0, 1.0, 0.5])
+
+
+def test_reset_to_v_reset_value():
+    p = LIFParams(beta=1.0, threshold=1.0, v_reset=0.25)
+    v, s = lif_step(jnp.asarray([0.9]), jnp.asarray([0.5]), p)
+    assert s[0] == 1.0 and np.isclose(v[0], 0.25)
+
+
+def test_surrogate_gradient_nonzero_near_threshold():
+    p = LIFParams()
+
+    def f(v):
+        return spike_fn(v, p.threshold, p.surrogate_slope).sum()
+
+    g_at = jax.grad(f)(jnp.asarray([1.0]))       # at threshold
+    g_far = jax.grad(f)(jnp.asarray([-10.0]))    # far below
+    assert g_at[0] > 0.1
+    assert g_far[0] < g_at[0] * 1e-2
+
+
+def test_rate_encode_statistics():
+    x = jnp.asarray([0.1, 0.9])
+    spikes = rate_encode(x, 2000, jax.random.key(0))
+    rates = np.asarray(spikes.mean(axis=0))
+    assert np.allclose(rates, [0.1, 0.9], atol=0.05)
+
+
+def test_lif_gradient_flows_through_time():
+    p = LIFParams(beta=0.9, threshold=1.0)
+
+    def loss(w):
+        currents = jnp.ones((5, 3)) * w
+        spikes, _ = lif_rollout(currents, p)
+        return spikes.sum()
+
+    g = jax.grad(loss)(0.4)
+    assert np.isfinite(g) and abs(g) > 0

@@ -1,0 +1,107 @@
+"""ILP mapping (paper §III-D, eqs. 3-7): exactness + constraint compliance."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mapping import (MappingProblem, max_flow_assignment,
+                                solve_mapping, solve_mapping_bruteforce,
+                                solve_mapping_full_ilp, solve_mapping_greedy,
+                                solve_mapping_reduced_ilp)
+
+
+def _random_problem(rng, n_src, n_dest, m, n, density, fanout_slack):
+    conn = rng.random((n_src, n_dest)) < density
+    fanin = conn.sum(axis=1)
+    if fanout_slack:
+        fanout = np.maximum(fanin, 1)
+    else:
+        fanout = np.maximum((fanin * rng.uniform(0.3, 1.0, n_src)).astype(int), 1)
+    return MappingProblem(n_dest=n_dest, n_engines=m, n_caps=n,
+                          conn=conn, fanout=fanout)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_full_equals_reduced_equals_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, n_src=4, n_dest=4, m=2, n=2,
+                        density=0.6, fanout_slack=False)
+    s_full = solve_mapping_full_ilp(p)
+    s_red = solve_mapping_reduced_ilp(p)
+    s_bf = solve_mapping_bruteforce(p)
+    s_full.check(p)
+    s_red.check(p)
+    s_bf.check(p)
+    assert s_full.n_assigned == s_bf.n_assigned
+    assert s_red.n_assigned == s_bf.n_assigned
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_maxflow_exact_when_fanout_slack(seed):
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, n_src=6, n_dest=8, m=3, n=2,
+                        density=0.5, fanout_slack=True)
+    s_mf = max_flow_assignment(p)
+    s_ilp = solve_mapping_reduced_ilp(p)
+    s_mf.check(p)
+    assert s_mf.n_assigned == s_ilp.n_assigned == min(p.n_dest,
+                                                      p.n_engines * p.n_caps)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_greedy_feasible_and_bounded(seed):
+    rng = np.random.default_rng(seed)
+    p = _random_problem(rng, n_src=5, n_dest=6, m=2, n=2,
+                        density=0.5, fanout_slack=False)
+    s_g = solve_mapping_greedy(p)
+    s_g.check(p)                       # always feasible
+    s_opt = solve_mapping_reduced_ilp(p)
+    assert s_g.n_assigned <= s_opt.n_assigned
+
+
+def test_capacity_binds():
+    """More neurons than M*N capacitors -> exactly M*N assigned."""
+    rng = np.random.default_rng(1)
+    conn = np.ones((3, 10), dtype=bool)
+    p = MappingProblem(n_dest=10, n_engines=2, n_caps=2, conn=conn,
+                       fanout=np.full(3, 10))
+    s = solve_mapping(p, method="reduced_ilp")
+    s.check(p)
+    assert s.n_assigned == 4
+    assert s.objective == 6
+
+
+def test_fanout_binds():
+    """A source with fanout limit 2 caps its destinations' assignments."""
+    conn = np.ones((1, 5), dtype=bool)
+    p = MappingProblem(n_dest=5, n_engines=5, n_caps=5, conn=conn,
+                       fanout=np.asarray([2]))
+    s = solve_mapping(p, method="full_ilp")
+    s.check(p)
+    assert s.n_assigned == 2
+
+
+def test_auto_method_selects_and_solves():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(20, 30))
+    w[np.abs(w) < 0.8] = 0
+    p = MappingProblem.from_weights(w, n_engines=4, n_caps=8)
+    s = solve_mapping(p)
+    s.check(p)
+    assert s.n_assigned == 30  # capacity 32 >= 30, fanout slack
+
+
+def test_ilp_load_balances_rows():
+    """The ILP objective (max assignments) with capacity constraints spreads
+    neurons across engines — dispatch rows (B_i) stay near optimal."""
+    rng = np.random.default_rng(3)
+    w = (rng.random((8, 16)) < 0.9).astype(float)
+    p = MappingProblem.from_weights(w, n_engines=4, n_caps=4)
+    s = solve_mapping(p, method="reduced_ilp")
+    s.check(p)
+    loads = np.bincount(s.engine[s.engine >= 0], minlength=4)
+    assert loads.max() <= 4
+    assert s.n_assigned == 16

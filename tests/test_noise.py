@@ -1,0 +1,52 @@
+"""Analog non-ideality sensitivity (core/noise.py, DESIGN.md §2a)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noise import AnalogNoise, perturb_beta, perturb_membrane, perturb_weights
+
+
+def test_zero_noise_is_identity(rng):
+    w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    n = AnalogNoise()
+    assert np.array_equal(np.asarray(perturb_weights(jax.random.key(0), w, n)),
+                          np.asarray(w))
+
+
+def test_weight_noise_magnitude(rng):
+    w = jnp.ones((64, 64))
+    n = AnalogNoise(weight_sigma=0.05)
+    w2 = perturb_weights(jax.random.key(0), w, n)
+    rel = float(jnp.std(w2 - w))
+    assert 0.03 < rel < 0.07
+
+
+def test_snn_accuracy_degrades_gracefully(rng):
+    """C2C gain error <= 2% costs little accuracy; 50% destroys it —
+    the qualitative robustness story for the analog path."""
+    from repro.data.events import EventDatasetConfig, event_batches, synthetic_event_dataset
+    from repro.snn.mlp import SNNConfig, snn_forward, train_snn
+
+    cfg_d = EventDatasetConfig("noise", 8, 8, num_steps=12, base_rate=0.02,
+                               signal_rate=0.5)
+    snn = SNNConfig(layer_sizes=(cfg_d.n_in, 32, 10), num_steps=12)
+    spikes, labels = synthetic_event_dataset(cfg_d, 12, jax.random.key(0))
+    params, _ = train_snn(jax.random.key(1), snn,
+                          event_batches(spikes, labels, 32), steps=120)
+
+    def acc(p):
+        counts, _ = snn_forward(p, jnp.asarray(spikes.swapaxes(0, 1)), snn)
+        return float((np.asarray(counts).argmax(-1) == labels).mean())
+
+    base = acc(params)
+
+    def noisy(sigma, seed):
+        n = AnalogNoise(weight_sigma=sigma)
+        return [perturb_weights(jax.random.key(seed + i), w, n)
+                for i, w in enumerate(params)]
+
+    small = np.mean([acc(noisy(0.02, s)) for s in range(3)])
+    large = np.mean([acc(noisy(0.8, s)) for s in range(3)])
+    assert small > base - 0.15
+    assert large < small

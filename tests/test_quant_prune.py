@@ -1,0 +1,69 @@
+"""8-bit quantization + L1 pruning (Algorithm 1 steps) + C2C ladder math."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prune import l1_prune_mask, prune_pytree, sparsity
+from repro.core.quant import (c2c_ladder_value, quantize_symmetric,
+                              quantization_error, quantize_pytree)
+
+
+def test_quant_error_bound(rng):
+    w = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    err = quantization_error(w, bits=8)
+    assert float(err) <= float(jnp.max(jnp.abs(w))) / 127 + 1e-6
+
+
+def test_quant_roundtrip_int8_range(rng):
+    w = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    qt = quantize_symmetric(w, bits=8)
+    q = np.asarray(qt.q)
+    assert q.dtype == np.int8 and q.max() <= 127 and q.min() >= -128
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_c2c_ladder_equals_q_over_2n(seed):
+    """eq. (2): sum W_i 2^{i-n} == magnitude/2^n (sign-magnitude)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(-127, 128, size=(16,)).astype(np.int8))
+    frac = c2c_ladder_value(q, bits=8)
+    np.testing.assert_allclose(np.asarray(frac),
+                               np.asarray(q, np.float32) / 256.0, atol=1e-7)
+
+
+def test_ladder_times_scale_recovers_dequant(rng):
+    w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    qt = quantize_symmetric(w, bits=8)
+    v_ref = qt.scale * 256.0
+    np.testing.assert_allclose(np.asarray(c2c_ladder_value(qt.q) * v_ref),
+                               np.asarray(qt.dequantize()), atol=1e-5)
+
+
+def test_prune_amount(rng):
+    w = jnp.asarray(rng.normal(size=(50, 40)).astype(np.float32))
+    mask = l1_prune_mask(w, 0.7)
+    assert abs(float((~mask).mean()) - 0.7) < 0.02
+    # keeps the largest magnitudes
+    kept_min = float(jnp.abs(w[mask]).min())
+    dropped_max = float(jnp.abs(w[~mask]).max())
+    assert kept_min >= dropped_max - 1e-6
+
+
+def test_prune_pytree_and_sparsity(rng):
+    params = {"a": jnp.asarray(rng.normal(size=(20, 20)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(5,)).astype(np.float32))}
+    pruned, masks = prune_pytree(params, 0.5)
+    assert masks["b"] is None                # 1-D left alone
+    assert 0.4 < sparsity(pruned) < 0.6
+
+
+def test_quantize_pytree_skips_biases(rng):
+    params = {"w": jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32)),
+              "bias": jnp.zeros((8,))}
+    qtree, dq = quantize_pytree(params)
+    from repro.core.quant import QuantizedTensor
+    assert isinstance(qtree["w"], QuantizedTensor)
+    assert not isinstance(qtree["bias"], QuantizedTensor)
+    assert dq["w"].shape == (8, 8)

@@ -1,0 +1,157 @@
+"""Sharding rules + distributed execution on emulated multi-device meshes."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.parallel.sharding import (DECODE_RULES_SP, TRAIN_RULES,
+                                     ShardingRules)
+
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, devices: int = 8) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    pre = (f'import os; os.environ["XLA_FLAGS"] = '
+           f'"--xla_force_host_platform_device_count={devices}"\n')
+    p = subprocess.run([sys.executable, "-c", pre + script],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=600)
+    assert p.returncode == 0, (p.stdout[-2000:], p.stderr[-4000:])
+    return p.stdout
+
+
+def test_rules_divisibility_fallback():
+    mesh = jax.make_mesh((1,), ("model",))
+    r = ShardingRules(mesh, TRAIN_RULES)
+    # kv_heads=8 divisible by 1 -> sharded (trivially)
+    spec = r.spec(("layers", "embed", "kv_heads", "head_dim"), (2, 16, 8, 4))
+    assert spec[2] == "model"
+
+
+def test_rules_drop_nondivisible():
+    from jax.sharding import PartitionSpec
+    # fake a 16-wide model axis via a mesh of shape (1,) is impossible —
+    # test the arithmetic path directly with a virtual mesh in a subprocess
+    out = _run("""
+import jax
+from repro.parallel.sharding import ShardingRules, TRAIN_RULES
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+r = ShardingRules(mesh, TRAIN_RULES)
+# kv_heads=6 not divisible by 4 -> dropped
+s1 = r.spec(("kv_heads",), (6,))
+assert s1[0] is None, s1
+# heads=8 divisible -> sharded
+s2 = r.spec(("heads",), (8,))
+assert s2[0] == "model", s2
+# batch maps to ("pod","data") but pod missing -> data only
+s3 = r.spec(("act_batch",), (8,))
+assert s3[0] == "data", s3
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_no_axis_reuse_within_spec():
+    mesh = jax.make_mesh((1,), ("model",))
+    r = ShardingRules(mesh, TRAIN_RULES)
+    spec = r.spec(("heads", "mlp"), (4, 8))
+    used = [s for s in spec if s is not None]
+    assert len(used) == len(set(used))
+
+
+def test_train_step_spmd_8dev():
+    """Full sharded train step executes on a 4x2 mesh and loss is finite."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.parallel.sharding import TRAIN_RULES, activate
+from repro.engine.train_loop import make_train_step, init_train_state
+from repro.optim.adamw import AdamWConfig
+cfg = get_smoke_config("internlm2_1_8b")
+bundle = build_model(cfg)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+with activate(mesh, TRAIN_RULES):
+    params = bundle.init(jax.random.key(0))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1)
+    state = init_train_state(None, params, opt_cfg).as_tree()
+    step = jax.jit(make_train_step(bundle.loss, opt_cfg))
+    batch = {"tokens": jnp.ones((8, 17), jnp.int32)}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+print("OK", float(metrics["loss"]))
+""")
+    assert "OK" in out
+
+
+def test_sp_flash_decode_matches_baseline():
+    """Sequence-parallel flash-decoding == baseline decode attention, on an
+    8-device mesh with the cache seq-sharded."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models.transformer import decode_attention, _cache_positions
+from repro.parallel.decode import make_sp_attention
+from repro.configs import get_smoke_config
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+B, H, KH, HD, C = 4, 8, 2, 16, 32
+q = jnp.asarray(rng.normal(size=(B, H, HD)).astype(np.float32))
+ck = jnp.asarray(rng.normal(size=(B, KH, C, HD)).astype(np.float32))
+cv = jnp.asarray(rng.normal(size=(B, KH, C, HD)).astype(np.float32))
+pos = jnp.asarray(20, jnp.int32)
+slot_pos = jnp.where(jnp.arange(C) <= 20, jnp.arange(C), -1)
+
+want = decode_attention(q, ck, cv, slot_pos, pos, None)
+
+cks = jax.device_put(ck, NamedSharding(mesh, P("data", None, "model")))
+cvs = jax.device_put(cv, NamedSharding(mesh, P("data", None, "model")))
+attn = make_sp_attention(mesh, batch_axes=("data",))
+got = attn(q, cks, cvs, slot_pos, pos, None)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+# windowed variant
+want_w = decode_attention(q, ck, cv, slot_pos, pos, 8)
+got_w = attn(q, cks, cvs, slot_pos, pos, 8)
+np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w), atol=1e-5)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.parallel.pipeline import pipeline_forward, sequential_reference
+mesh = jax.make_mesh((4,), ("stage",))
+rng = np.random.default_rng(0)
+n_stages, n_micro, mb, d = 4, 6, 3, 8
+params = {"w": jnp.asarray(rng.normal(size=(n_stages, d, d)).astype(np.float32) * 0.3)}
+xs = jnp.asarray(rng.normal(size=(n_micro, mb, d)).astype(np.float32))
+def layer_fn(p, x):
+    return jnp.tanh(x @ p["w"])
+got = pipeline_forward(layer_fn, params, xs, mesh)
+want = sequential_reference(layer_fn, params, xs)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+print("OK")
+""", devices=4)
+    assert "OK" in out
+
+
+def test_multipod_mesh_axes():
+    out = _run("""
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert m1.axis_names == ("data", "model") and m1.devices.shape == (16, 16)
+m2 = make_production_mesh(multi_pod=True)
+assert m2.axis_names == ("pod", "data", "model")
+assert m2.devices.shape == (2, 16, 16)
+print("OK")
+""", devices=512)
+    assert "OK" in out
