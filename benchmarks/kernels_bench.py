@@ -24,6 +24,49 @@ def _timeit(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def bench_batched_engine(batch: int = 32, t_steps: int = 20,
+                         density: float = 0.2) -> float:
+    """Batched jit engine vs. the looped cycle-accurate oracle on the same
+    mapped model.  Returns the wall-clock speedup at the given batch size
+    (CI asserts >= 5x at batch 32)."""
+    from repro.core.accelerator import map_model, run
+    from repro.core.energy import AcceleratorSpec
+    from repro.core.lif import LIFParams
+    from repro.engine import run_batched
+
+    rng = np.random.default_rng(0)
+    sizes = (128, 96, 64)
+    ws = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 0.4, (sizes[i], sizes[i + 1])).astype(np.float32)
+        w[np.abs(w) < np.quantile(np.abs(w), 0.6)] = 0
+        ws.append(w)
+    spec = AcceleratorSpec("bench", n_cores=2, n_engines=8, n_caps=16,
+                           weight_mem_bytes=1 << 20)
+    model = map_model(ws, spec, lif=LIFParams(beta=0.85, threshold=0.6))
+    spikes = (rng.random((batch, t_steps, sizes[0])) < density) \
+        .astype(np.float32)
+
+    packed = model.pack()
+    res_b = run_batched(packed, spikes)          # compile
+    t0 = time.perf_counter()
+    res_b = run_batched(packed, spikes)
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    oracle_out = [run(model, spikes[b]).out_spikes for b in range(batch)]
+    t_loop = time.perf_counter() - t0
+
+    assert all(np.array_equal(res_b.out_spikes[b], oracle_out[b])
+               for b in range(batch)), "batched engine != oracle"
+    speedup = t_loop / max(t_batched, 1e-9)
+    print(f"engine/run_batched_b{batch},{t_batched*1e6:.0f},"
+          f"speedup_vs_loop={speedup:.1f}x")
+    assert speedup >= 5.0 or batch < 32, \
+        f"batched engine speedup regressed: {speedup:.1f}x < 5x at batch {batch}"
+    return speedup
+
+
 def main():
     rng = np.random.default_rng(0)
     # event_synapse: sparsity-proportional work
@@ -50,6 +93,8 @@ def main():
     us = _timeit(ops.c2c_matmul, x, wq, jnp.float32(0.01))
     ai = 2 * 256 * 1024 * 1024 / (x.nbytes + wq.nbytes + 256 * 1024 * 4)
     print(f"kernel/c2c_matmul,{us:.0f},arith_intensity={ai:.0f}")
+    # batched accelerator engine vs looped oracle
+    bench_batched_engine(batch=32)
 
 
 if __name__ == "__main__":

@@ -65,6 +65,17 @@ class MappedModel:
     layers: list[MappedLayer]
     lif: LIFParams
 
+    def pack(self, block_d: int | None = None):
+        """Pack into the batched JAX engine's pytree representation (see
+        :mod:`repro.engine.batched_run`), memoized per block size — the
+        table replay and device transfer happen once, not per batch."""
+        from repro.engine.batched_run import DEFAULT_BLOCK_D, pack_model
+        block_d = DEFAULT_BLOCK_D if block_d is None else block_d
+        cache = self.__dict__.setdefault("_packed_cache", {})
+        if block_d not in cache:
+            cache[block_d] = pack_model(self, block_d=block_d)
+        return cache[block_d]
+
 
 def map_model(weights: list[np.ndarray], spec: AcceleratorSpec,
               lif: LIFParams = LIFParams(), quant_bits: int = 8,
@@ -118,6 +129,20 @@ class RunResult:
     energy: EnergyReport
 
 
+def lif_rollout_np(currents: np.ndarray, p: LIFParams) -> np.ndarray:
+    """Discrete-time LIF over ``currents[T, n]`` (numpy, cycle-accurate twin
+    semantics): integrate, compare, hard-reset.  Shared by :func:`run`,
+    :func:`reference_forward`, and the batched engine's oracle tests."""
+    v = np.zeros(currents.shape[1:], dtype=np.float32)
+    out = np.zeros_like(currents)
+    for t in range(currents.shape[0]):
+        v = p.beta * v + currents[t]
+        fired = v >= p.threshold
+        out[t] = fired.astype(np.float32)
+        v = np.where(fired, p.v_reset, v)
+    return out
+
+
 def run(model: MappedModel, in_spikes: np.ndarray,
         sn_capacity_rows: int | None = None,
         frame_cycles: int | None = "default") -> RunResult:
@@ -138,27 +163,11 @@ def run(model: MappedModel, in_spikes: np.ndarray,
                                                len(rnd.neuron_ids))
             assigned = rnd.mapping.engine >= 0
             currents[:, rnd.neuron_ids[assigned]] += cur_sub[:, assigned]
-            if agg_stats is None:
-                agg_stats = stats
-            else:
-                agg_stats = DispatchStats(
-                    cycles=agg_stats.cycles + stats.cycles,
-                    rows_touched=agg_stats.rows_touched + stats.rows_touched,
-                    engine_ops=agg_stats.engine_ops + stats.engine_ops,
-                    events=agg_stats.events,  # same event stream
-                    sn_bytes_touched=(agg_stats.sn_bytes_touched
-                                      + stats.sn_bytes_touched),
-                    mem_e_peak=max(agg_stats.mem_e_peak, stats.mem_e_peak))
+            agg_stats = stats if agg_stats is None else agg_stats.merge_round(stats)
             cap_rows = sn_capacity_rows or max(total_rows, 1)
             util += mem_sn_utilization(rnd.tables, spikes, cap_rows)
         # discrete-time LIF over the layer's neurons
-        v = np.zeros(layer.n_dest, dtype=np.float32)
-        out = np.zeros_like(currents)
-        for t in range(t_steps):
-            v = p.beta * v + currents[t]
-            fired = v >= p.threshold
-            out[t] = fired.astype(np.float32)
-            v = np.where(fired, p.v_reset, v)
+        out = lif_rollout_np(currents, p)
         util_all.append(util)
         stats_all.append(agg_stats)
         spikes = out
@@ -177,12 +186,5 @@ def reference_forward(weights: list[np.ndarray], lif: LIFParams,
     spikes = np.asarray(in_spikes, dtype=np.float32)
     for w in weights:
         currents = spikes @ np.asarray(w, dtype=np.float32)
-        v = np.zeros(w.shape[1], dtype=np.float32)
-        out = np.zeros_like(currents)
-        for t in range(currents.shape[0]):
-            v = lif.beta * v + currents[t]
-            fired = v >= lif.threshold
-            out[t] = fired.astype(np.float32)
-            v = np.where(fired, lif.v_reset, v)
-        spikes = out
+        spikes = lif_rollout_np(currents, lif)
     return spikes

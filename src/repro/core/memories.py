@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import numpy as np
 
 from repro.core.mapping.ilp import MappingProblem, MappingSolution
@@ -62,6 +63,112 @@ class MemTables:
         virt_bits = max(int(np.ceil(np.log2(max(self.n_caps, 2)))), 1)
         waddr_bits = max(int(np.ceil(np.log2(max(self.weight_mem.shape[1], 2)))), 1)
         return m * (1 + virt_bits + waddr_bits)
+
+    def inverse_map(self) -> np.ndarray:
+        """(engine, capacitor) -> destination-neuron index (-1 = free)."""
+        sol = self.mapping
+        inv = -np.ones((self.n_engines, self.n_caps), dtype=np.int64)
+        for i in range(len(sol.engine)):
+            if sol.engine[i] >= 0:
+                inv[sol.engine[i], sol.capacitor[i]] = i
+        return inv
+
+    def dense_weights(self, n_dest: int) -> np.ndarray:
+        """Replay the tables into a dense ``[n_src, n_dest]`` matrix: the
+        effective synaptic weight each source event deposits on each assigned
+        destination.  This is what the batched engine executes — derived from
+        the memory *content*, not from the original weight matrix, so table
+        corruption shows up as an equivalence failure."""
+        inv = self.inverse_map()
+        n_src = len(self.e2a_count)
+        w = np.zeros((n_src, n_dest), dtype=np.float32)
+        for m in range(n_src):
+            a, b = int(self.e2a_addr[m]), int(self.e2a_count[m])
+            for r in range(a, a + b):
+                for j in np.nonzero(self.sn_valid[r])[0]:
+                    i = int(inv[j, int(self.sn_virt[r, j])])
+                    w[m, i] += self.weight_mem[j, int(self.sn_waddr[r, j])]
+        return w
+
+    def to_jax(self, pad_src: int | None = None,
+               pad_rows: int | None = None) -> "PackedTables":
+        """Pack the three control memories into padded int32 device arrays.
+
+        ``pad_src`` / ``pad_rows`` extend MEM_E2A / MEM_S&N to a static size
+        so tables from different rounds or layers can be stacked; padding
+        sources have B_i = 0 and padding rows have no valid entries.
+        """
+        import jax.numpy as jnp
+
+        s = len(self.e2a_count) if pad_src is None else int(pad_src)
+        r = self.n_rows if pad_rows is None else int(pad_rows)
+        assert s >= len(self.e2a_count) and r >= self.n_rows
+
+        def pad1(x, n):
+            return np.pad(np.asarray(x, dtype=np.int32), (0, n - len(x)))
+
+        def pad2(x, n):
+            x = np.asarray(x, dtype=np.int32)
+            return np.pad(x, ((0, n - x.shape[0]), (0, 0)))
+
+        return PackedTables(
+            e2a_count=jnp.asarray(pad1(self.e2a_count, s)),
+            e2a_addr=jnp.asarray(pad1(self.e2a_addr, s)),
+            sn_valid=jnp.asarray(pad2(self.sn_valid, r)),
+            sn_virt=jnp.asarray(pad2(self.sn_virt, r)),
+            sn_waddr=jnp.asarray(pad2(self.sn_waddr, r)),
+            weight_mem=jnp.asarray(self.weight_mem),
+            n_engines=self.n_engines,
+            n_caps=self.n_caps,
+            n_rows=self.n_rows,
+            row_bits=self.bits_per_row(),
+        )
+
+
+@dataclasses.dataclass
+class PackedTables:
+    """:class:`MemTables` as a JAX pytree: padded int32 arrays ready to ship
+    through ``jit``/``scan``/``shard_map``.  Static table geometry rides in
+    the treedef so retracing only happens when the geometry changes."""
+
+    e2a_count: jax.Array    # i32 [S_pad]
+    e2a_addr: jax.Array     # i32 [S_pad]
+    sn_valid: jax.Array     # i32 [R_pad, M] (0/1)
+    sn_virt: jax.Array      # i32 [R_pad, M]
+    sn_waddr: jax.Array     # i32 [R_pad, M]
+    weight_mem: jax.Array   # f32 [M, W]
+    n_engines: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_caps: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_rows: int = dataclasses.field(metadata=dict(static=True), default=0)
+    row_bits: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def row_bytes(self) -> int:
+        return (self.row_bits + 7) // 8
+
+    def stats_vectors(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-source (rows, cycles, MACs) contributed by one event — the
+        dot-product vectors behind the batched :class:`DispatchStats`.
+        Cached: the tables are static after packing, so the device-to-host
+        pulls happen once, not per ``run_batched`` call."""
+        cached = self.__dict__.get("_stats_vectors")
+        if cached is None:
+            count = np.asarray(self.e2a_count, dtype=np.int64)
+            addr = np.asarray(self.e2a_addr, dtype=np.int64)
+            valid = np.asarray(self.sn_valid, dtype=np.int64)
+            row_ops = valid.sum(axis=1)
+            cum = np.concatenate([[0], np.cumsum(row_ops)])
+            ops = cum[addr + count] - cum[addr]
+            cached = (count, np.maximum(count, 1), ops)
+            self.__dict__["_stats_vectors"] = cached
+        return cached
+
+
+jax.tree_util.register_dataclass(
+    PackedTables,
+    data_fields=["e2a_count", "e2a_addr", "sn_valid", "sn_virt", "sn_waddr",
+                 "weight_mem"],
+    meta_fields=["n_engines", "n_caps", "n_rows", "row_bits"])
 
 
 def build_event_memories(w: np.ndarray, sol: MappingSolution,
@@ -142,6 +249,18 @@ class DispatchStats:
     def total_cycles(self) -> int:
         return int(self.cycles.sum())
 
+    def merge_round(self, other: "DispatchStats") -> "DispatchStats":
+        """Combine stats of two rounds of the same layer: their dispatch
+        cycles/rows/ops add (rounds run sequentially) while the event stream
+        is shared, so ``events`` stays and MEM_E peaks take the max."""
+        return DispatchStats(
+            cycles=self.cycles + other.cycles,
+            rows_touched=self.rows_touched + other.rows_touched,
+            engine_ops=self.engine_ops + other.engine_ops,
+            events=self.events,
+            sn_bytes_touched=self.sn_bytes_touched + other.sn_bytes_touched,
+            mem_e_peak=max(self.mem_e_peak, other.mem_e_peak))
+
 
 def dispatch_simulate(tables: MemTables, spikes: np.ndarray,
                       n_dest: int) -> tuple[np.ndarray, DispatchStats]:
@@ -152,7 +271,6 @@ def dispatch_simulate(tables: MemTables, spikes: np.ndarray,
     equal ``spikes[t] @ W`` restricted to assigned neurons (tested).
     """
     t_steps, n_src = spikes.shape
-    sol = tables.mapping
     currents = np.zeros((t_steps, n_dest), dtype=np.float32)
     cycles = np.zeros(t_steps, dtype=np.int64)
     rows_touched = np.zeros(t_steps, dtype=np.int64)
@@ -160,11 +278,7 @@ def dispatch_simulate(tables: MemTables, spikes: np.ndarray,
     events = np.zeros(t_steps, dtype=np.int64)
     bytes_touched = np.zeros(t_steps, dtype=np.int64)
     row_bytes = (tables.bits_per_row() + 7) // 8
-    # inverse map (engine, cap) -> dest neuron
-    inv = -np.ones((tables.n_engines, tables.n_caps), dtype=np.int64)
-    for i in range(n_dest):
-        if sol.engine[i] >= 0:
-            inv[sol.engine[i], sol.capacitor[i]] = i
+    inv = tables.inverse_map()
     mem_e_peak = 0
     for t in range(t_steps):
         src_idx = np.nonzero(spikes[t])[0]

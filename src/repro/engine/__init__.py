@@ -1,1 +1,4 @@
+from repro.engine.batched_run import (BatchedDispatchStats, BatchedRunResult,  # noqa: F401
+                                      PackedLayer, PackedModel, PackedRound,
+                                      pack_model, run_batched, trace_count)
 from repro.engine.train_loop import TrainLoopConfig, TrainState, make_train_step, train_loop  # noqa: F401

@@ -1,0 +1,292 @@
+"""Batched, jit-compiled execution engine for the MENAGE software twin.
+
+The numpy :func:`repro.core.accelerator.run` is the cycle-accurate oracle: it
+walks timesteps, rounds, MEM_S&N rows, and engines in Python, which is exactly
+right for auditing the silicon and exactly wrong for serving traffic.  This
+module executes the *same* mapped model — the same control-memory content —
+as a batched JAX program:
+
+  * :func:`pack_model` turns a :class:`MappedModel` into a
+    :class:`PackedModel` **pytree**: per round, ``MemTables.to_jax()`` (the
+    padded int32 MEM_E2A / MEM_S&N tables) plus the dense effective-weight
+    matrix replayed out of those tables and scattered to global destination
+    columns (padded to the Pallas block size).
+  * :func:`run_batched` executes ``spikes[B, T, n_in]`` through the chain.
+    Per layer, the ``B*T`` spike vectors become padded event lists via
+    ``events_from_spikes`` (the software MEM_E writer; ``overflow_count``
+    reports drops against the static depth), synaptic accumulation routes
+    through the ``event_synapse`` Pallas kernel (interpret mode on CPU,
+    native on TPU), and the per-timestep LIF loop is a single
+    ``jax.lax.scan``.
+
+Equivalence contract (tested): output spikes are **bit-identical** to the
+oracle's for every batch element, and the reported :class:`DispatchStats`
+aggregates match it field for field.  Sub-ULP care: events are emitted in
+ascending source order, matching the oracle's accumulation order, and padding
+events add an exact ``0.0`` — so even the float32 partial sums agree.
+
+Data layout (see README "Batched engine"):
+
+  PackedModel.layers[l].rounds[r].tables   PackedTables (padded i32 pytree)
+  PackedModel.layers[l].rounds[r].w_dense  f32 [n_src, n_dest_pad]
+  events                                   i32 [B*T, E]   (pad = -1)
+  currents                                 f32 [B, T, n_dest_pad]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accelerator import MappedModel
+from repro.core.energy import AcceleratorSpec, EnergyReport, energy_model
+from repro.core.lif import LIFParams, lif_rollout
+from repro.core.memories import DispatchStats, PackedTables
+from repro.kernels import ops
+from repro.kernels.event_synapse import DEFAULT_BLOCK_D
+
+
+def _mem_e_depth(layer: "PackedLayer", max_events: int | None) -> int:
+    """Static MEM_E depth for a layer: full fan-in unless capped — shared by
+    the kernel dispatch and the overflow accounting, which must agree."""
+    return layer.n_src if max_events is None else min(max_events, layer.n_src)
+
+
+def _pad_dest(n_dest: int, block_d: int) -> int:
+    """Smallest dest width event_synapse can tile: unpadded when a single
+    block covers the layer, else the next multiple of ``block_d``."""
+    if n_dest <= block_d:
+        return n_dest
+    return -(-n_dest // block_d) * block_d
+
+
+@dataclasses.dataclass
+class PackedRound:
+    tables: PackedTables
+    w_dense: jax.Array      # f32 [n_src, n_dest_pad], global (padded) columns
+
+
+jax.tree_util.register_dataclass(
+    PackedRound, data_fields=["tables", "w_dense"], meta_fields=[])
+
+
+@dataclasses.dataclass
+class PackedLayer:
+    rounds: list[PackedRound]
+    n_src: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_dest: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_dest_pad: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+
+jax.tree_util.register_dataclass(
+    PackedLayer, data_fields=["rounds"],
+    meta_fields=["n_src", "n_dest", "n_dest_pad"])
+
+
+@dataclasses.dataclass
+class PackedModel:
+    layers: list[PackedLayer]
+    lif: LIFParams = dataclasses.field(
+        metadata=dict(static=True), default=LIFParams())
+    spec: AcceleratorSpec | None = dataclasses.field(
+        metadata=dict(static=True), default=None)
+    block_d: int = dataclasses.field(
+        metadata=dict(static=True), default=DEFAULT_BLOCK_D)
+
+    @property
+    def n_in(self) -> int:
+        return self.layers[0].n_src
+
+    @property
+    def n_out(self) -> int:
+        return self.layers[-1].n_dest
+
+
+jax.tree_util.register_dataclass(
+    PackedModel, data_fields=["layers"],
+    meta_fields=["lif", "spec", "block_d"])
+
+
+def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedModel:
+    """Build the device-ready pytree from a mapped model.  The effective
+    weights are replayed from the control memories (``MemTables
+    .dense_weights``), not taken from the original matrices — the batched
+    engine executes what is actually in the SRAM."""
+    layers = []
+    for layer in model.layers:
+        n_dest_pad = _pad_dest(layer.n_dest, block_d)
+        rounds = []
+        for rnd in layer.rounds:
+            w_local = rnd.tables.dense_weights(len(rnd.neuron_ids))
+            w_glob = np.zeros((layer.n_src, n_dest_pad), dtype=np.float32)
+            w_glob[:, rnd.neuron_ids] = w_local
+            rounds.append(PackedRound(tables=rnd.tables.to_jax(),
+                                      w_dense=jnp.asarray(w_glob)))
+        layers.append(PackedLayer(rounds=rounds, n_src=layer.n_src,
+                                  n_dest=layer.n_dest, n_dest_pad=n_dest_pad))
+    return PackedModel(layers=layers, lif=model.lif, spec=model.spec,
+                       block_d=block_d)
+
+
+# --------------------------------------------------------------- jitted core
+
+_trace_count = 0
+
+
+def trace_count() -> int:
+    """How many times the jitted forward has been (re)traced — the jit
+    cache-stability probe used by tests and benchmarks."""
+    return _trace_count
+
+
+def _lif_scan(currents: jax.Array, lif: LIFParams) -> jax.Array:
+    """LIF over ``currents[B, T, n]`` via the shared ``lax.scan`` rollout
+    (`repro.core.lif`) — operation-for-operation the oracle's update, so
+    float32 results match; the unused voltage trace is dead-code-eliminated
+    under jit."""
+    spikes, _ = lif_rollout(currents.transpose(1, 0, 2), lif)
+    return spikes.transpose(1, 0, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("max_events",))
+def _forward(packed: PackedModel, spikes: jax.Array,
+             max_events: int | None) -> list[jax.Array]:
+    """Per-layer output spike trains ([B, T, n_dest] each; the last entry is
+    the model output).  Dispatch = MEM_E write + event_synapse kernel; LIF =
+    one scan per layer."""
+    global _trace_count
+    _trace_count += 1
+    b, t, _ = spikes.shape
+    outs = []
+    for layer in packed.layers:
+        events = ops.events_from_spikes(spikes.reshape(b * t, layer.n_src),
+                                        _mem_e_depth(layer, max_events))
+        # rounds target disjoint destination columns -> one fused kernel call
+        w = functools.reduce(jnp.add, [r.w_dense for r in layer.rounds])
+        currents = ops.event_synapse(events, w, block_d=packed.block_d)
+        out = _lif_scan(currents.reshape(b, t, layer.n_dest_pad), packed.lif)
+        spikes = out[..., :layer.n_dest]
+        outs.append(spikes)
+    return outs
+
+
+# ------------------------------------------------------------ batched result
+
+@dataclasses.dataclass
+class BatchedDispatchStats:
+    """Per-sample, per-step dispatch statistics (``[B, T]`` int64 arrays);
+    ``sample(b)`` recovers the oracle's :class:`DispatchStats` exactly."""
+
+    cycles: np.ndarray
+    rows_touched: np.ndarray
+    engine_ops: np.ndarray
+    events: np.ndarray
+    sn_bytes_touched: np.ndarray
+    mem_e_peak: np.ndarray      # [B]
+
+    def sample(self, b: int) -> DispatchStats:
+        return DispatchStats(
+            cycles=self.cycles[b], rows_touched=self.rows_touched[b],
+            engine_ops=self.engine_ops[b], events=self.events[b],
+            sn_bytes_touched=self.sn_bytes_touched[b],
+            mem_e_peak=int(self.mem_e_peak[b]))
+
+
+@dataclasses.dataclass
+class BatchedRunResult:
+    out_spikes: np.ndarray                       # [B, T, n_out]
+    per_layer_stats: list[BatchedDispatchStats]
+    per_layer_util: list[np.ndarray]             # [B, T] float64
+    overflow: list[np.ndarray]                   # [B, T] events dropped
+    spec: AcceleratorSpec | None = None
+
+    @property
+    def batch(self) -> int:
+        return self.out_spikes.shape[0]
+
+    def sample_stats(self, b: int) -> list[DispatchStats]:
+        return [s.sample(b) for s in self.per_layer_stats]
+
+    def sample_energy(self, b: int,
+                      frame_cycles: int | None = "default") -> EnergyReport:
+        assert self.spec is not None, "pack_model carried no AcceleratorSpec"
+        if frame_cycles == "default":
+            return energy_model(self.spec, self.sample_stats(b))
+        return energy_model(self.spec, self.sample_stats(b),
+                            frame_cycles=frame_cycles)
+
+
+def _layer_stats(in_spikes: np.ndarray, layer: PackedLayer,
+                 max_events: int | None,
+                 sn_capacity_rows: int | None
+                 ) -> tuple[BatchedDispatchStats, np.ndarray, np.ndarray]:
+    """Vectorized dispatch accounting for one layer: every per-step counter
+    is a dot product of the (0/1) spike raster with a per-source table
+    vector, reproducing the oracle's Python accumulation in int64."""
+    sp = (in_spikes > 0)
+    b, t, _ = sp.shape
+    shape = (b, t)
+    cycles = np.zeros(shape, dtype=np.int64)
+    rows = np.zeros(shape, dtype=np.int64)
+    mac = np.zeros(shape, dtype=np.int64)
+    bytes_t = np.zeros(shape, dtype=np.int64)
+    util = np.zeros(shape, dtype=np.float64)
+    total_rows = sum(r.tables.n_rows for r in layer.rounds)
+    cap = sn_capacity_rows or max(total_rows, 1)
+    for rnd in layer.rounds:
+        rows_v, cyc_v, ops_v = rnd.tables.stats_vectors()
+        r_rows = sp @ rows_v
+        cycles += sp @ cyc_v
+        rows += r_rows
+        mac += sp @ ops_v
+        bytes_t += r_rows * rnd.tables.row_bytes
+        util += r_rows.astype(np.float64) / cap
+    events = sp.sum(axis=2, dtype=np.int64)
+    overflow = np.maximum(events - _mem_e_depth(layer, max_events), 0)
+    stats = BatchedDispatchStats(cycles=cycles, rows_touched=rows,
+                                 engine_ops=mac, events=events,
+                                 sn_bytes_touched=bytes_t,
+                                 mem_e_peak=events.max(axis=1))
+    return stats, util, overflow
+
+
+def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,
+                *, max_events: int | None = None,
+                sn_capacity_rows: int | None = None,
+                with_stats: bool = True) -> BatchedRunResult:
+    """Execute a batch of spike trains ``[B, T, n_in]`` through the chain.
+
+    Bit-exact vs. the oracle when ``max_events`` is None (or >= every
+    layer's spike count); with a tight ``max_events`` the engine models the
+    finite MEM_E depth — excess events are dropped lowest-priority-last and
+    counted per step in ``result.overflow``.
+
+    ``with_stats=False`` skips the (host-side) accounting — the serving
+    configuration, where only the output spikes matter.
+    """
+    packed = model if isinstance(model, PackedModel) else model.pack()
+    spikes = jnp.asarray(np.asarray(in_spikes, dtype=np.float32))
+    assert spikes.ndim == 3 and spikes.shape[2] == packed.n_in, \
+        f"expected [B, T, {packed.n_in}], got {spikes.shape}"
+    layer_outs = _forward(packed, spikes, max_events)
+    out = np.asarray(layer_outs[-1])
+    if not with_stats:
+        return BatchedRunResult(out_spikes=out, per_layer_stats=[],
+                                per_layer_util=[], overflow=[],
+                                spec=packed.spec)
+    stats_all, util_all, drop_all = [], [], []
+    layer_in = np.asarray(in_spikes, dtype=np.float32)
+    for li, layer in enumerate(packed.layers):
+        stats, util, overflow = _layer_stats(layer_in, layer, max_events,
+                                             sn_capacity_rows)
+        stats_all.append(stats)
+        util_all.append(util)
+        drop_all.append(overflow)
+        layer_in = np.asarray(layer_outs[li])
+    return BatchedRunResult(out_spikes=out, per_layer_stats=stats_all,
+                            per_layer_util=util_all, overflow=drop_all,
+                            spec=packed.spec)

@@ -51,8 +51,10 @@ def event_synapse(events: jax.Array, weights: jax.Array,
                   interpret: bool = False) -> jax.Array:
     """events [B, E] int32 (pad=-1); weights [n_src, n_dest] f32 ->
     currents [B, n_dest] f32."""
-    b, _ = events.shape
+    b, n_events = events.shape
     n_src, n_dest = weights.shape
+    if n_events == 0:  # static zero-depth MEM_E: nothing dispatches
+        return jnp.zeros((b, n_dest), weights.dtype)
     bd = min(block_d, n_dest)
     assert n_dest % bd == 0, f"n_dest={n_dest} not divisible by block_d={bd}"
     grid = (b, n_dest // bd)

@@ -131,9 +131,8 @@ def lower_cell(arch: str, shape_name: str, mesh, rules_name: str = "base",
 
 
 def analyze(compiled, lowered, meta, n_devices: int) -> dict:
-    cost = compiled.cost_analysis()
-    if isinstance(cost, list):
-        cost = cost[0]
+    from repro.parallel.compat import compiled_cost_analysis
+    cost = compiled_cost_analysis(compiled)
     hlo = compiled.as_text()
     # loop-aware re-analysis: cost_analysis() counts while bodies once (see
     # hlo_flops.py) — with scan-over-layers that undercounts by ~n_layers.

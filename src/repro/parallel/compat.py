@@ -1,0 +1,38 @@
+"""Version compatibility shims for the `jax` public API.
+
+`shard_map` graduated from `jax.experimental.shard_map` to the top-level
+`jax.shard_map` in jax 0.5; this repo pins `jax[cpu]==0.4.37` in CI but must
+keep working when the container ships a newer jax.  Import it from here
+everywhere instead of hard-coding either location.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def pcast_varying(x, axis_names: tuple[str, ...]):
+    """`jax.lax.pcast(x, axes, to="varying")` on jax versions that type
+    manual-axis values as replicated/varying; identity on older jax (0.4.x),
+    where every value inside shard_map is already device-varying."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is None:
+        return x
+    return pcast(x, axis_names, to="varying")
+
+
+def compiled_cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` returns a dict on jax >= 0.5 but a
+    one-element list of dicts on 0.4.x."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+__all__ = ["shard_map", "pcast_varying", "compiled_cost_analysis"]

@@ -64,6 +64,15 @@ def snn_forward(params: list[jax.Array], spikes: jax.Array, cfg: SNNConfig):
     return out_spikes.sum(axis=0), out_spikes
 
 
+def snn_forward_batch_major(params: list[jax.Array], spikes_bt: jax.Array,
+                            cfg: SNNConfig):
+    """:func:`snn_forward` for batch-major ``[B, T, n_in]`` spike rasters —
+    the batched accelerator engine's layout (`repro.engine.batched_run`).
+    Returns ``(out_counts [B, n_out], out_spikes [B, T, n_out])``."""
+    counts, out = snn_forward(params, jnp.swapaxes(spikes_bt, 0, 1), cfg)
+    return counts, jnp.swapaxes(out, 0, 1)
+
+
 def snn_loss(params, spikes, labels, cfg: SNNConfig):
     counts, _ = snn_forward(params, spikes, cfg)
     logits = counts  # rate code: counts are the logits

@@ -1,0 +1,26 @@
+"""`hypothesis` when available, no-op stand-ins otherwise.
+
+`hypothesis` ships in the package's ``[dev]`` extra (installed by CI), not as
+a runtime dependency.  Importing ``given``/``settings``/``st`` from here lets
+a bare environment skip just the property tests instead of erroring out of —
+or skipping — whole modules that are mostly plain pytest tests.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    def given(*_args, **_kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _Strategies:
+        """Accepts any strategy expression at decoration time."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -1,0 +1,167 @@
+"""Batched JAX engine vs. the cycle-accurate numpy oracle.
+
+The contract under test (DESIGN: batched engine): ``run_batched`` executes
+the same control-memory content as ``run`` and must agree **bit-exactly** on
+output spikes, DispatchStats aggregates, and MEM_S&N utilization for every
+batch element — plus MEM_E overflow accounting and jit cache stability.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import lif_rollout_np, map_model, run
+from repro.core.energy import AcceleratorSpec
+from repro.core.lif import LIFParams
+from repro.engine import batched_run as br
+
+SPEC = AcceleratorSpec("test", n_cores=3, n_engines=4, n_caps=8,
+                       weight_mem_bytes=1 << 16)
+STAT_FIELDS = ("cycles", "rows_touched", "engine_ops", "events",
+               "sn_bytes_touched")
+
+
+def _pruned_mlp(rng, sizes, density=0.5):
+    ws = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 0.5, (sizes[i], sizes[i + 1]))
+        th = np.quantile(np.abs(w), 1 - density)
+        w[np.abs(w) < th] = 0
+        ws.append(w.astype(np.float32))
+    return ws
+
+
+def _assert_sample_equivalent(res, model, spikes_b, b):
+    oracle = run(model, spikes_b)
+    np.testing.assert_array_equal(res.out_spikes[b], oracle.out_spikes)
+    for li, (bs, os_) in enumerate(zip(res.sample_stats(b),
+                                       oracle.per_layer_stats)):
+        for f in STAT_FIELDS:
+            np.testing.assert_array_equal(
+                getattr(bs, f), getattr(os_, f), err_msg=f"layer {li} {f}")
+        assert bs.mem_e_peak == os_.mem_e_peak
+    for li in range(len(model.layers)):
+        np.testing.assert_array_equal(res.per_layer_util[li][b],
+                                      oracle.per_layer_util[li])
+    e = res.sample_energy(b)
+    assert e.total_ops == oracle.energy.total_ops
+    assert e.tops_per_w == oracle.energy.tops_per_w
+
+
+@pytest.mark.parametrize("seed,sizes,density,p_spk", [
+    (0, (24, 16, 12, 8), 0.5, 0.3),
+    (1, (18, 20, 6), 0.7, 0.5),
+    (2, (32, 8), 0.3, 0.15),
+])
+def test_batched_matches_oracle(seed, sizes, density, p_spk):
+    rng = np.random.default_rng(seed)
+    model = map_model(_pruned_mlp(rng, sizes, density), SPEC,
+                      lif=LIFParams(beta=0.8, threshold=0.7))
+    spikes = (rng.random((4, 10, sizes[0])) < p_spk).astype(np.float32)
+    res = br.run_batched(model, spikes)
+    for b in range(spikes.shape[0]):
+        _assert_sample_equivalent(res, model, spikes[b], b)
+
+
+def test_batched_matches_oracle_multi_round(rng):
+    """A 64-wide layer on 4x8 capacitors runs in two capacitor-reassignment
+    rounds; the fused dense replay must still be bit-exact."""
+    ws = _pruned_mlp(rng, (10, 64), density=0.5)
+    model = map_model(ws, SPEC, lif=LIFParams(beta=0.8, threshold=0.7))
+    assert len(model.layers[0].rounds) == 2
+    spikes = (rng.random((3, 8, 10)) < 0.4).astype(np.float32)
+    res = br.run_batched(model, spikes)
+    for b in range(3):
+        _assert_sample_equivalent(res, model, spikes[b], b)
+
+
+def test_dense_weights_replay_tables(rng):
+    """MemTables.dense_weights reconstructs exactly the assigned entries of
+    the quantized weight matrix from the memory content."""
+    ws = _pruned_mlp(rng, (12, 10))
+    model = map_model(ws, SPEC)
+    layer = model.layers[0]
+    w = layer.rounds[0].tables.dense_weights(layer.n_dest)
+    assigned = layer.mapping.engine >= 0
+    np.testing.assert_array_equal(w[:, assigned], layer.w_q[:, assigned])
+    np.testing.assert_array_equal(w[:, ~assigned], 0.0)
+
+
+def test_to_jax_padding_and_stats_vectors(rng):
+    """to_jax pads MEM_E2A/MEM_S&N to the requested static geometry, and the
+    derived per-source stats vectors match a direct table walk."""
+    ws = _pruned_mlp(rng, (9, 7))
+    tables = map_model(ws, SPEC).layers[0].rounds[0].tables
+    pt = tables.to_jax(pad_src=16, pad_rows=tables.n_rows + 5)
+    assert pt.e2a_count.shape == (16,) and pt.e2a_count.dtype == np.int32
+    assert pt.sn_valid.shape == (tables.n_rows + 5, SPEC.n_engines)
+    assert int(np.asarray(pt.e2a_count)[9:].sum()) == 0
+    assert int(np.asarray(pt.sn_valid)[tables.n_rows:].sum()) == 0
+    rows_v, cyc_v, ops_v = pt.stats_vectors()
+    for m in range(9):
+        a, b = int(tables.e2a_addr[m]), int(tables.e2a_count[m])
+        assert rows_v[m] == b and cyc_v[m] == max(b, 1)
+        assert ops_v[m] == int(tables.sn_valid[a:a + b].sum())
+
+
+def test_mem_e_overflow_accounting(rng):
+    """With a tight static MEM_E depth, dropped-event counts match
+    overflow semantics and the engine computes exactly the truncated event
+    stream (lowest source indices retained, hardware FIFO order)."""
+    ws = _pruned_mlp(rng, (10, 12), density=0.8)
+    lif = LIFParams(beta=0.8, threshold=0.7)
+    model = map_model(ws, SPEC, lif=lif)
+    spikes = (rng.random((3, 6, 10)) < 0.7).astype(np.float32)
+    depth = 3
+    res = br.run_batched(model, spikes, max_events=depth)
+    n_spk = (spikes > 0).sum(-1)
+    np.testing.assert_array_equal(res.overflow[0],
+                                  np.maximum(n_spk - depth, 0))
+    w_eff = model.layers[0].rounds[0].tables.dense_weights(12)
+    for b in range(3):
+        currents = np.zeros((6, 12), np.float32)
+        for t in range(6):
+            for m in np.nonzero(spikes[b, t])[0][:depth]:
+                currents[t] += w_eff[m]
+        np.testing.assert_array_equal(res.out_spikes[b],
+                                      lif_rollout_np(currents, lif))
+
+
+def test_zero_mem_e_depth(rng):
+    """A zero-depth MEM_E drops every event: silent output, full overflow
+    (regression: the Pallas interpret path used to die on an E=0 block)."""
+    ws = _pruned_mlp(rng, (16, 8))
+    model = map_model(ws, SPEC)
+    spikes = (rng.random((2, 4, 16)) < 0.5).astype(np.float32)
+    res = br.run_batched(model, spikes, max_events=0)
+    assert res.out_spikes.sum() == 0
+    np.testing.assert_array_equal(res.overflow[0],
+                                  (spikes > 0).sum(-1))
+
+
+def test_jit_cache_stability(rng):
+    """Fixed shapes => exactly one trace, however many batches are served."""
+    ws = _pruned_mlp(rng, (16, 12, 8))
+    packed = map_model(ws, SPEC).pack()
+    def batch():
+        return (rng.random((2, 5, 16)) < 0.3).astype(np.float32)
+    br.run_batched(packed, batch())
+    n = br.trace_count()
+    for _ in range(3):
+        br.run_batched(packed, batch())
+    assert br.trace_count() == n
+    # a new batch size is a new trace (shape change), exactly once
+    wide = (rng.random((4, 5, 16)) < 0.3).astype(np.float32)
+    br.run_batched(packed, wide)
+    assert br.trace_count() == n + 1
+    br.run_batched(packed, wide)
+    assert br.trace_count() == n + 1
+
+
+def test_with_stats_false_skips_accounting(rng):
+    ws = _pruned_mlp(rng, (16, 8))
+    model = map_model(ws, SPEC)
+    spikes = (rng.random((2, 5, 16)) < 0.3).astype(np.float32)
+    res = br.run_batched(model, spikes, with_stats=False)
+    full = br.run_batched(model, spikes)
+    np.testing.assert_array_equal(res.out_spikes, full.out_spikes)
+    assert res.per_layer_stats == [] and res.overflow == []

@@ -1,7 +1,7 @@
 """ILP-machinery expert placement (beyond-paper, DESIGN.md)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mapping.experts import place_experts, placement_peak_load
 

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mapping import (MappingProblem, max_flow_assignment,
                                 solve_mapping, solve_mapping_bruteforce,

@@ -2,7 +2,7 @@
 cycle-level dispatch equivalence with the dense computation."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.mapping import MappingProblem, solve_mapping
 from repro.core.memories import (build_event_memories, dispatch_simulate,

@@ -2,7 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.prune import l1_prune_mask, prune_pytree, sparsity
 from repro.core.quant import (c2c_ladder_value, quantize_symmetric,
