@@ -4,11 +4,15 @@ Synthetic stand-in datasets (DESIGN.md §5): the validated claim is the
 *flow* — pruning+quantization costs <~1 accuracy point (paper: 94.75->94.1
 on N-MNIST, 65.38->65.03 on CIFAR10-DVS) — not the absolute numbers.
 Reduced train budgets keep this CPU-feasible; --full trains longer.
+
+``--model conv`` adds the spiking-CNN path on the same CIFAR10-DVS-like
+stream and prints the MLP-vs-CNN accuracy split (the general-platform claim
+of §III); ``--model both`` runs mlp then conv and prints the delta.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -17,13 +21,14 @@ import numpy as np
 from repro.core.prune import prune_pytree, sparsity
 from repro.core.quant import quantize_pytree
 from repro.data.events import EventDatasetConfig, event_batches, synthetic_event_dataset
+from repro.snn.conv import conv_snn_forward, train_conv_snn
 from repro.snn.mlp import SNNConfig, snn_forward, train_snn
 
 
-def _accuracy(params, snn, spikes, labels, batch=64):
+def _accuracy(params, snn, spikes, labels, batch=64, forward=snn_forward):
     correct = 0
     for i in range(0, len(labels), batch):
-        counts, _ = snn_forward(
+        counts, _ = forward(
             params, jnp.asarray(spikes[i:i + batch].swapaxes(0, 1)), snn)
         correct += int((np.asarray(counts).argmax(-1)
                         == labels[i:i + batch]).sum())
@@ -48,18 +53,54 @@ def run_one(tag, data_cfg, snn_cfg, steps, prune_amt=0.5, n_per_class=24):
     return acc0, acc1
 
 
-def main(full: bool = False):
-    # N-MNIST-like: the paper's 200/100/40/10 MLP on 34x34x2 input
-    nm_data = EventDatasetConfig.nmnist_like()
-    nm_snn = SNNConfig.nmnist()
-    run_one("nmnist", nm_data, nm_snn, steps=400 if full else 120)
-    # CIFAR10-DVS-like: 1000/500/200/100/10 on spatially-reduced input
-    cf_data = EventDatasetConfig.cifar10_dvs_like()
-    cf_snn = SNNConfig(layer_sizes=(cf_data.n_in, 1000, 500, 200, 100, 10),
-                       num_steps=25)
-    run_one("cifar10dvs", cf_data, cf_snn, steps=200 if full else 60,
-            n_per_class=16)
+def run_one_conv(tag, data_cfg, conv_cfg, steps, prune_amt=0.5,
+                 n_per_class=16):
+    """Conv twin of :func:`run_one`: same flow, spiking-CNN model."""
+    key = jax.random.key(0)
+    spikes, labels = synthetic_event_dataset(data_cfg, n_per_class, key)
+    n_test = len(labels) // 5
+    it = event_batches(spikes[n_test:], labels[n_test:], batch=32)
+    params, _ = train_conv_snn(jax.random.key(1), conv_cfg, it, steps=steps,
+                               lr=1e-3)
+    te_s, te_l = spikes[:n_test], labels[:n_test]
+    acc0 = _accuracy(params, conv_cfg, te_s, te_l, forward=conv_snn_forward)
+    pruned, _ = prune_pytree(params, prune_amt)
+    _, dq = quantize_pytree(pruned)
+    acc1 = _accuracy(dq, conv_cfg, te_s, te_l, forward=conv_snn_forward)
+    print(f"accuracy/{tag},before={acc0:.4f},after_prune_quant={acc1:.4f},"
+          f"drop={acc0-acc1:.4f},sparsity={sparsity(pruned):.2f}")
+    return acc0, acc1
+
+
+def main(full: bool = False, model: str = "mlp"):
+    results = {}
+    if model in ("mlp", "both"):
+        # N-MNIST-like: the paper's 200/100/40/10 MLP on 34x34x2 input
+        nm_data = EventDatasetConfig.nmnist_like()
+        nm_snn = SNNConfig.nmnist()
+        run_one("nmnist", nm_data, nm_snn, steps=400 if full else 120)
+        # CIFAR10-DVS-like: 1000/500/200/100/10 on spatially-reduced input
+        cf_data = EventDatasetConfig.cifar10_dvs_like()
+        cf_snn = SNNConfig(layer_sizes=(cf_data.n_in, 1000, 500, 200, 100, 10),
+                           num_steps=25)
+        results["mlp"] = run_one("cifar10dvs", cf_data, cf_snn,
+                                 steps=200 if full else 60, n_per_class=16)
+    if model in ("conv", "both"):
+        # spiking CNN on the same (further downsampled) CIFAR10-DVS stream —
+        # the canonical config shared with benchmarks/energy.py
+        from repro.configs.menage_paper import CIFAR_CONV, CIFAR_CONV_DATA
+        results["conv"] = run_one_conv("cifar10dvs-conv", CIFAR_CONV_DATA,
+                                       CIFAR_CONV,
+                                       steps=200 if full else 60)
+    if model == "both":
+        print(f"accuracy/split,mlp_after={results['mlp'][1]:.4f},"
+              f"conv_after={results['conv'][1]:.4f},"
+              f"conv_minus_mlp={results['conv'][1]-results['mlp'][1]:.4f}")
 
 
 if __name__ == "__main__":
-    main(full="--full" in sys.argv)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--model", choices=("mlp", "conv", "both"), default="mlp")
+    args = ap.parse_args()
+    main(full=args.full, model=args.model)

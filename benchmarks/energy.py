@@ -11,18 +11,21 @@ not accuracy, and the synthetic sets match the paper's activity contrast
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import numpy as np
 
-from repro.configs.menage_paper import (CIFAR_DATA, CIFAR_SNN, NMNIST_DATA,
+from repro.configs.menage_paper import (CIFAR_CONV, CIFAR_CONV_DATA,
+                                        CIFAR_DATA, CIFAR_SNN, NMNIST_DATA,
                                         NMNIST_SNN)
 from repro.core.accelerator import map_model, run
 from repro.core.energy import ACCEL_1, ACCEL_2
 from repro.core.prune import prune_pytree
 from repro.core.quant import quantize_pytree
 from repro.data.events import event_batches, synthetic_event_dataset
+from repro.snn.conv import layer_specs, train_conv_snn
 from repro.snn.mlp import train_snn
 
 
@@ -52,27 +55,62 @@ def measure(spec, data_cfg, snn_cfg, n_images: int = 4,
             "rounds_per_layer": [len(l.rounds) for l in model.layers]}
 
 
-def main(fast: bool = True):
+def measure_conv(spec, data_cfg, conv_cfg, n_images: int = 2,
+                 train_steps: int = 15, seed: int = 0):
+    """Conv twin of :func:`measure`: train the spiking CNN, prune, lower to
+    Conv2d/SumPool2d/Dense specs (shared weight-SRAM words), execute on the
+    cycle-level oracle."""
+    key = jax.random.key(seed)
+    spikes, labels = synthetic_event_dataset(data_cfg, n_per_class=8, key=key)
+    it = event_batches(spikes, labels, batch=16)
+    params, _ = train_conv_snn(key, conv_cfg, it, steps=train_steps, lr=1e-3)
+    pruned, _ = prune_pytree(params, 0.5)
+    model = map_model(layer_specs(pruned, conv_cfg), spec, lif=conv_cfg.lif)
+    reports = [run(model, spikes[i]).energy for i in range(n_images)]
+    return {"accel": spec.name,
+            "tops_per_w": float(np.mean([r.tops_per_w for r in reports])),
+            "utilization": float(np.mean([r.utilization for r in reports])),
+            "ops_per_image": int(np.mean([r.total_ops for r in reports])),
+            "rounds_per_layer": [len(l.rounds) for l in model.layers],
+            "sram_bytes_per_layer": [l.weight_bytes for l in model.layers]}
+
+
+def main(fast: bool = True, model: str = "mlp"):
     t0 = time.monotonic()
     rows = []
-    # NOTE: CIFAR10-DVS synthetic stand-in is spatially downsampled (DESIGN.md
-    # §5) so the CPU-hosted simulation finishes; activity statistics are
-    # preserved, layer widths are the paper's.
-    r1 = measure(ACCEL_1, NMNIST_DATA, NMNIST_SNN,
-                 n_images=2 if fast else 8)
-    rows.append(r1)
-    r2 = measure(ACCEL_2, CIFAR_DATA, CIFAR_SNN,
-                 n_images=1 if fast else 4, train_steps=15)
-    rows.append(r2)
     paper = {"Accel1": 3.4, "Accel2": 12.1}
-    for r in rows:
+    if model in ("mlp", "both"):
+        # NOTE: CIFAR10-DVS synthetic stand-in is spatially downsampled
+        # (DESIGN.md §5) so the CPU-hosted simulation finishes; activity
+        # statistics are preserved, layer widths are the paper's.
+        r1 = measure(ACCEL_1, NMNIST_DATA, NMNIST_SNN,
+                     n_images=2 if fast else 8)
+        rows.append(("mlp", r1))
+        r2 = measure(ACCEL_2, CIFAR_DATA, CIFAR_SNN,
+                     n_images=1 if fast else 4, train_steps=15)
+        rows.append(("mlp", r2))
+    if model in ("conv", "both"):
+        rc = measure_conv(ACCEL_2, CIFAR_CONV_DATA, CIFAR_CONV,
+                          n_images=1 if fast else 4)
+        rows.append(("conv", rc))
+    for fam, r in rows:
         target = paper[r["accel"]]
-        print(f"energy/{r['accel']},{r['tops_per_w']:.3f},"
+        print(f"energy/{r['accel']}-{fam},{r['tops_per_w']:.3f},"
               f"paper={target},util={r['utilization']:.3f},"
               f"ops={r['ops_per_image']}")
+    by_fam = {fam: r for fam, r in rows if r["accel"] == "Accel2"}
+    if len(by_fam) == 2:
+        print(f"energy/split,mlp={by_fam['mlp']['tops_per_w']:.3f},"
+              f"conv={by_fam['conv']['tops_per_w']:.3f} TOPS/W on Accel2 "
+              f"(Table II implies the MLP-vs-CNN split)")
     print(f"energy,elapsed,{time.monotonic()-t0:.1f}s")
-    return rows
+    return [r for _, r in rows]
 
 
 if __name__ == "__main__":
-    main(fast=False)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--model", choices=("mlp", "conv", "both"),
+                    default="mlp")
+    args = ap.parse_args()
+    main(fast=args.fast, model=args.model)

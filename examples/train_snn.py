@@ -1,8 +1,12 @@
-"""End-to-end driver: train the paper's N-MNIST MLP (200/100/40/10) for a
-few hundred steps with fault-tolerant checkpointing, then run the full
-prune -> quantize -> map -> execute flow on Accel_1.
+"""End-to-end driver: train a MENAGE evaluation model with fault-tolerant
+checkpointing, then run the full prune -> quantize -> map -> execute flow.
 
-  PYTHONPATH=src python examples/train_snn.py [--steps 300]
+  --model mlp   (default) the paper's N-MNIST MLP (200/100/40/10) on Accel_1
+  --model conv  the spiking CNN (conv->LIF->pool x2 + dense head) on the
+                synthetic CIFAR10-DVS stream, lowered layer-spec by layer-spec
+                (Conv2d with shared weight-SRAM words) onto Accel_2
+
+  PYTHONPATH=src python examples/train_snn.py [--steps 300] [--model conv]
 """
 
 import argparse
@@ -11,21 +15,60 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.menage_paper import NMNIST_DATA, NMNIST_SNN
+from repro.configs.menage_paper import (CIFAR_CONV, CIFAR_CONV_DATA,
+                                        NMNIST_DATA, NMNIST_SNN)
 from repro.core.accelerator import map_model, run
-from repro.core.energy import ACCEL_1
+from repro.core.energy import ACCEL_1, ACCEL_2
 from repro.core.prune import prune_pytree
 from repro.core.quant import quantize_pytree
 from repro.data.events import event_batches, synthetic_event_dataset
+from repro.engine.batched_run import run_batched
+from repro.snn.conv import conv_snn_forward, layer_specs, train_conv_snn
 from repro.snn.mlp import init_snn, snn_forward, snn_loss, train_snn
 from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+
+
+def main_conv(args):
+    """Conv path: train briefly, prune, lower to Conv2d/SumPool2d/Dense
+    specs, map onto Accel_2, and cross-check the two executers."""
+    cfg = CIFAR_CONV
+    key = jax.random.key(0)
+    spikes, labels = synthetic_event_dataset(CIFAR_CONV_DATA, n_per_class=16,
+                                             key=key)
+    n_test = len(labels) // 5
+    train_it = event_batches(spikes[n_test:], labels[n_test:], batch=32)
+    params, hist = train_conv_snn(jax.random.key(1), cfg, train_it,
+                                  steps=args.steps, log_every=50)
+    print(f"conv train: loss={hist[-1][1]:.3f} acc={hist[-1][2]:.2f}")
+
+    counts, _ = conv_snn_forward(
+        params, jnp.asarray(spikes[:n_test].swapaxes(0, 1)), cfg)
+    acc = float((np.asarray(counts).argmax(-1) == labels[:n_test]).mean())
+    print(f"conv test accuracy (before prune/quant): {acc:.3f}")
+
+    pruned, _ = prune_pytree(params, 0.5)
+    model = map_model(layer_specs(pruned, cfg), ACCEL_2, lif=cfg.lif)
+    for li, layer in enumerate(model.layers):
+        print(f"  layer {li}: {layer.n_src}->{layer.n_dest} "
+              f"rounds={len(layer.rounds)} sram={layer.sram_bytes}B "
+              f"(unique {layer.weight_bytes}B) shared={layer.shared_weights}")
+    batch = run_batched(model, spikes[:4])
+    res = run(model, spikes[0])
+    for b in range(batch.batch):
+        assert (batch.out_spikes[b] == run(model, spikes[b]).out_spikes).all(), \
+            f"engine diverged from oracle on sample {b}"
+    print(f"Accel_2 conv execution: {res.energy.tops_per_w:.2f} TOPS/W "
+          f"(oracle == batched engine on {batch.batch} samples)")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--ckpt", default="/tmp/menage_snn_ckpt")
+    ap.add_argument("--model", choices=("mlp", "conv"), default="mlp")
     args = ap.parse_args()
+    if args.model == "conv":
+        return main_conv(args)
 
     key = jax.random.key(0)
     spikes, labels = synthetic_event_dataset(NMNIST_DATA, n_per_class=32,

@@ -4,6 +4,7 @@ design points."""
 from repro.core.energy import ACCEL_1, ACCEL_2  # noqa: F401
 from repro.core.lif import LIFParams
 from repro.data.events import EventDatasetConfig
+from repro.snn.conv import ConvSNNConfig
 from repro.snn.mlp import SNNConfig
 
 # N-MNIST: 200/100/40/10 MLP on Accel_1 (4 cores, M=10, N=16, 400 KB/core)
@@ -17,6 +18,16 @@ CIFAR_DATA = EventDatasetConfig.cifar10_dvs_like()
 CIFAR_SNN = SNNConfig(layer_sizes=(CIFAR_DATA.n_in, 1000, 500, 200, 100, 10),
                       lif=LIFParams(beta=0.9, threshold=1.0),
                       num_steps=25)
+
+# Conv counterpart on the same synthetic CIFAR10-DVS stream (§III claims
+# linear AND convolutional models; Table II implies the split).  Five mapped
+# layers — conv, pool, conv, pool, dense — one per Accel_2 MX-NEURACORE.
+# Default down=8 keeps the CPU-hosted cycle-level oracle tractable.
+CIFAR_CONV_DATA = EventDatasetConfig.cifar10_dvs_like(down=8)
+CIFAR_CONV = ConvSNNConfig(
+    in_shape=(2, 128 // 8, 128 // 8),
+    conv_channels=(8, 16), kernel_size=3, stride=1, padding=1, pool=2,
+    lif=LIFParams(beta=0.9, threshold=1.0), num_steps=25)
 
 TRAIN_PARAMS = {  # Table I
     "nmnist": {"lr": 1e-3, "epochs": 50, "prune": "l1", "quant_bits": 8},

@@ -2,6 +2,7 @@
 
 Layers:
   lif          — discrete-time LIF + surrogate gradient (A-NEURON math)
+  layers       — map_model layer specs: Dense / Conv2d / SumPool2d lowering
   quant        — 8-bit symmetric quantization + ideal C2C ladder model
   prune        — unstructured L1 pruning
   mapping      — the ILP (eqs. 3-7): exact HiGHS solvers, max-flow fast path, greedy
@@ -11,6 +12,7 @@ Layers:
   noise        — analog non-ideality perturbations
 """
 
+from repro.core.layers import Conv2d, Dense, SumPool2d, as_layer_spec  # noqa: F401
 from repro.core.lif import LIFParams, lif_step, lif_rollout, rate_encode, spike_fn  # noqa: F401
 from repro.core.quant import QuantizedTensor, quantize_symmetric, c2c_ladder_value  # noqa: F401
 from repro.core.prune import l1_prune_mask, prune_pytree, sparsity  # noqa: F401

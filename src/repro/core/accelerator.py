@@ -1,7 +1,9 @@
 """End-to-end MENAGE accelerator simulation (paper Fig. 1 + Algorithm 1).
 
 A MENAGE instance is a chain of MX-NEURACOREs, one per model layer.  Mapping
-a trained+pruned+quantized SNN onto an :class:`AcceleratorSpec` produces, per
+a trained+pruned+quantized SNN — a list of layer specs: bare matrices /
+``Dense``, or ``Conv2d`` lowered with shared weight-SRAM words (see
+:mod:`repro.core.layers`) — onto an :class:`AcceleratorSpec` produces, per
 layer: an ILP mapping solution, the three control memories, and the A-SYN
 weight SRAM.  ``run`` then executes a spike train through the chain with the
 cycle-level dispatch simulator driving discrete-time LIF virtual neurons —
@@ -20,6 +22,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.energy import AcceleratorSpec, EnergyReport, energy_model
+from repro.core.layers import Conv2d, Dense, LayerSpec, as_layer_spec
 from repro.core.lif import LIFParams
 from repro.core.mapping import MappingProblem, MappingSolution, solve_mapping
 from repro.core.memories import (DispatchStats, MemTables,
@@ -41,10 +44,20 @@ class MappedRound:
 
 @dataclasses.dataclass
 class MappedLayer:
-    w_q: np.ndarray            # dequantized int8 weights actually on the SRAM
+    w_q: np.ndarray            # unrolled dequantized int8 synaptic matrix
     rounds: list[MappedRound]
     n_src: int
     n_dest: int
+    layer_spec: LayerSpec | None = None   # quantized Dense/Conv2d spec
+    weight_bytes: int = 0      # unique stored bytes (kernel taps for conv)
+    sram_bytes: int = 0        # A-SYN words physically allocated: a tap
+                               # shared across engines/rounds is stored once
+                               # per engine per round that references it
+
+    @property
+    def shared_weights(self) -> bool:
+        """True when MEM_S&N rows share SRAM words (conv lowering)."""
+        return isinstance(self.layer_spec, Conv2d)
 
     @property
     def mapping(self) -> MappingSolution:  # convenience: first round
@@ -77,26 +90,45 @@ class MappedModel:
         return cache[block_d]
 
 
-def map_model(weights: list[np.ndarray], spec: AcceleratorSpec,
+def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
               lif: LIFParams = LIFParams(), quant_bits: int = 8,
               fanout: int | None = None,
               method: str = "auto") -> MappedModel:
     """Algorithm 1 steps 3-5: quantize, ILP-map, build config memories.
 
-    weights: list of (n_in, n_out) pruned float matrices (one per layer).
-    Each layer must fit one MX-NEURACORE: n_out <= M*N and
-    nbytes(w != 0) <= weight_mem_bytes.
+    weights: list of layer specs, one per layer — bare ``(n_in, n_out)``
+    pruned float matrices (treated as :class:`~repro.core.layers.Dense`) or
+    :class:`~repro.core.layers.Conv2d` specs.  Convolutions are quantized at
+    the *kernel*, unrolled to their sparse per-output synaptic matrix, and
+    lowered with shared A-SYN SRAM words (one stored tap, many MEM_S&N rows
+    pointing at it) — the SRAM budget check counts unique kernel bytes, not
+    unrolled synapses.  Each layer must fit one MX-NEURACORE's weight SRAM;
+    layers wider than M*N run in multiple capacitor-reassignment rounds.
     """
     assert len(weights) <= spec.n_cores, \
         f"model has {len(weights)} layers but {spec.name} has {spec.n_cores} cores"
     layers = []
-    for li, w in enumerate(weights):
-        n_src, n_dest = w.shape
-        nz_bytes = int((w != 0).sum())  # 8-bit weights -> 1 byte per synapse
+    prev: LayerSpec | None = None
+    for li, layer_in in enumerate(weights):
+        ls = as_layer_spec(layer_in)
+        if prev is not None:
+            assert ls.n_src == prev.n_dest, \
+                f"layer {li} expects {ls.n_src} inputs but layer {li-1} " \
+                f"produces {prev.n_dest}"
+        prev = ls
+        # quantize the STORED tensor (kernel for conv, matrix for dense) so
+        # synapses sharing an SRAM word carry identical dequantized values
+        stored = np.asarray(ls.stored_weights)
+        qt = quantize_symmetric(stored, bits=quant_bits)
+        ls_q = ls.with_stored(np.asarray(qt.dequantize()) * (stored != 0))
+        nz_bytes = ls_q.unique_weight_bytes   # 8-bit -> 1 byte per SRAM word
+        # necessary condition, checked before the (expensive) ILP; the
+        # sufficient physical-allocation check follows the rounds loop
         assert nz_bytes <= spec.weight_mem_bytes, \
             f"layer {li}: {nz_bytes} B of weights > {spec.weight_mem_bytes} B SRAM"
-        qt = quantize_symmetric(np.asarray(w), bits=quant_bits)
-        w_q = np.asarray(qt.dequantize()) * (np.asarray(w) != 0)
+        w_q = np.asarray(ls_q.unroll())
+        share = ls_q.share_ids()
+        n_src, n_dest = ls_q.n_src, ls_q.n_dest
         # multi-round ILP: solve, peel off assigned neurons, re-solve on the
         # remainder (capacitor reassignment, §III-D)
         remaining = np.arange(n_dest)
@@ -111,13 +143,25 @@ def map_model(weights: list[np.ndarray], spec: AcceleratorSpec,
                 raise AssertionError(
                     f"layer {li}: ILP cannot assign any of the remaining "
                     f"{len(remaining)} neurons (fan-out too tight)")
-            tables = build_event_memories(w_sub, sol, spec.n_engines,
-                                          spec.n_caps)
+            tables = build_event_memories(
+                w_sub, sol, spec.n_engines, spec.n_caps,
+                share_ids=None if share is None else share[:, remaining])
             rounds.append(MappedRound(neuron_ids=remaining.copy(),
                                       mapping=sol, tables=tables))
             remaining = remaining[sol.engine < 0]
+        # the hardware-fit guarantee: words PHYSICALLY allocated.  A shared
+        # tap is stored once per engine per round that references it (each
+        # engine's A-SYN slice is private), so this exceeds nz_bytes for
+        # conv; for dense it is the assigned-synapse count (<= nz_bytes).
+        sram_bytes = sum(r.tables.n_weight_words for r in rounds)
+        assert sram_bytes <= spec.weight_mem_bytes, \
+            f"layer {li}: mapping stores {sram_bytes} B across " \
+            f"{len(rounds)} round(s) > {spec.weight_mem_bytes} B SRAM " \
+            f"({nz_bytes} B unique)"
         layers.append(MappedLayer(w_q=w_q, rounds=rounds,
-                                  n_src=n_src, n_dest=n_dest))
+                                  n_src=n_src, n_dest=n_dest,
+                                  layer_spec=ls_q, weight_bytes=nz_bytes,
+                                  sram_bytes=sram_bytes))
     return MappedModel(spec=spec, layers=layers, lif=lif)
 
 
@@ -127,6 +171,9 @@ class RunResult:
     per_layer_stats: list[DispatchStats]
     per_layer_util: list[np.ndarray]       # MEM_S&N utilization per step
     energy: EnergyReport
+    overflow: list[np.ndarray] = dataclasses.field(default_factory=list)
+    # events dropped by the finite MEM_E depth, per layer per step (all
+    # zeros when run() was not given ``max_events``)
 
 
 def lif_rollout_np(currents: np.ndarray, p: LIFParams) -> np.ndarray:
@@ -145,13 +192,21 @@ def lif_rollout_np(currents: np.ndarray, p: LIFParams) -> np.ndarray:
 
 def run(model: MappedModel, in_spikes: np.ndarray,
         sn_capacity_rows: int | None = None,
-        frame_cycles: int | None = "default") -> RunResult:
+        frame_cycles: int | None = "default",
+        max_events: int | None = None) -> RunResult:
     """Execute a spike train [T, n_in] through the MX-NEURACORE chain.
     Rounds within a layer execute sequentially (their cycles add); their
-    currents target disjoint neuron subsets."""
+    currents target disjoint neuron subsets.
+
+    ``max_events`` caps the per-step MEM_E FIFO depth on every core:
+    excess events are dropped lowest-priority-last (ascending source index
+    kept first) *before* dispatch, so the loss propagates through the LIF
+    into every downstream layer — the same semantics as
+    ``run_batched(max_events=...)``, tested equivalent.
+    """
     p = model.lif
     spikes = np.asarray(in_spikes, dtype=np.float32)
-    stats_all, util_all = [], []
+    stats_all, util_all, drop_all = [], [], []
     for layer in model.layers:
         t_steps = spikes.shape[0]
         currents = np.zeros((t_steps, layer.n_dest), dtype=np.float32)
@@ -160,12 +215,17 @@ def run(model: MappedModel, in_spikes: np.ndarray,
         util = np.zeros(t_steps)
         for rnd in layer.rounds:
             cur_sub, stats = dispatch_simulate(rnd.tables, spikes,
-                                               len(rnd.neuron_ids))
+                                               len(rnd.neuron_ids),
+                                               max_events=max_events)
             assigned = rnd.mapping.engine >= 0
             currents[:, rnd.neuron_ids[assigned]] += cur_sub[:, assigned]
             agg_stats = stats if agg_stats is None else agg_stats.merge_round(stats)
             cap_rows = sn_capacity_rows or max(total_rows, 1)
-            util += mem_sn_utilization(rnd.tables, spikes, cap_rows)
+            util += mem_sn_utilization(rnd.tables, spikes, cap_rows,
+                                       max_events=max_events)
+        arrivals = (spikes > 0).sum(axis=1).astype(np.int64)
+        depth = arrivals.max(initial=0) if max_events is None else max_events
+        drop_all.append(np.maximum(arrivals - depth, 0))
         # discrete-time LIF over the layer's neurons
         out = lif_rollout_np(currents, p)
         util_all.append(util)
@@ -177,14 +237,18 @@ def run(model: MappedModel, in_spikes: np.ndarray,
         energy = energy_model(model.spec, stats_all,
                               frame_cycles=frame_cycles)
     return RunResult(out_spikes=spikes, per_layer_stats=stats_all,
-                     per_layer_util=util_all, energy=energy)
+                     per_layer_util=util_all, energy=energy,
+                     overflow=drop_all)
 
 
-def reference_forward(weights: list[np.ndarray], lif: LIFParams,
+def reference_forward(weights: "list[np.ndarray | LayerSpec]", lif: LIFParams,
                       in_spikes: np.ndarray) -> np.ndarray:
-    """Pure dense reference: same math, no event machinery (the oracle)."""
+    """Pure dense reference: same math, no event machinery (the oracle).
+    Accepts the same layer specs as :func:`map_model` — conv layers execute
+    as their unrolled synaptic matrices."""
     spikes = np.asarray(in_spikes, dtype=np.float32)
-    for w in weights:
+    for layer in weights:
+        w = as_layer_spec(layer).unroll()
         currents = spikes @ np.asarray(w, dtype=np.float32)
         spikes = lif_rollout_np(currents, lif)
     return spikes

@@ -51,6 +51,7 @@ class MemTables:
     n_engines: int
     n_caps: int
     mapping: MappingSolution
+    n_weight_words: int = 0  # A-SYN words actually allocated (across engines)
 
     @property
     def n_rows(self) -> int:
@@ -89,6 +90,29 @@ class MemTables:
                     i = int(inv[j, int(self.sn_virt[r, j])])
                     w[m, i] += self.weight_mem[j, int(self.sn_waddr[r, j])]
         return w
+
+    def replay_coo(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Replay the tables into COO triplets ``(src, dest_local, weight)``
+        — one per stored synapse — in :meth:`dense_weights` accumulation
+        order.  O(rows x engines) work and memory: for shared-weight (conv)
+        layers this is the replay path that never materializes the
+        ``n_src x n_dest`` dense matrix.  Like ``dense_weights`` it is
+        derived from the memory *content*, so table corruption still shows
+        up as an equivalence failure."""
+        used = self.e2a_count.sum()
+        if used == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, np.zeros(0, dtype=np.float32)
+        # build_event_memories lays rows out contiguously in source order
+        starts = np.concatenate([[0], np.cumsum(self.e2a_count)[:-1]])
+        assert (self.e2a_addr == starts).all(), \
+            "replay_coo requires source-ordered contiguous MEM_S&N rows"
+        row_src = np.repeat(np.arange(len(self.e2a_count)), self.e2a_count)
+        rr, jj = np.nonzero(self.sn_valid[: len(row_src)])
+        inv = self.inverse_map()
+        dest = inv[jj, self.sn_virt[rr, jj]]
+        vals = self.weight_mem[jj, self.sn_waddr[rr, jj]]
+        return row_src[rr], dest, vals.astype(np.float32)
 
     def to_jax(self, pad_src: int | None = None,
                pad_rows: int | None = None) -> "PackedTables":
@@ -172,9 +196,18 @@ jax.tree_util.register_dataclass(
 
 
 def build_event_memories(w: np.ndarray, sol: MappingSolution,
-                         n_engines: int, n_caps: int) -> MemTables:
+                         n_engines: int, n_caps: int,
+                         share_ids: np.ndarray | None = None) -> MemTables:
     """Construct MEM_E2A / MEM_S&N / weight SRAM from a pruned weight matrix
-    ``w[n_src, n_dest]`` and an ILP mapping solution."""
+    ``w[n_src, n_dest]`` and an ILP mapping solution.
+
+    ``share_ids`` (int64 ``[n_src, n_dest]``, -1 = no synapse) enables the
+    shared-weight indirection used for convolutions: synapses carrying the
+    same id within one engine point their MEM_S&N weight address at a single
+    A-SYN SRAM word (one stored kernel tap, many rows reading it), instead
+    of each synapse allocating its own word.  ``None`` keeps the dense
+    layout: one SRAM word per synapse, bit-identical to the pre-conv path.
+    """
     n_src, n_dest = w.shape
     e2a_count = np.zeros(n_src, dtype=np.int64)
     e2a_addr = np.zeros(n_src, dtype=np.int64)
@@ -182,6 +215,24 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
     # per-engine weight SRAM allocation (next free address per engine)
     w_next = np.zeros(n_engines, dtype=np.int64)
     w_entries: list[list[float]] = [[] for _ in range(n_engines)]
+    # per-engine share-id -> allocated SRAM address
+    shared_addr: list[dict[int, int]] = [{} for _ in range(n_engines)]
+
+    def alloc(j: int, m: int, i: int) -> int:
+        """SRAM address in engine j for synapse (m, i): fresh word unless
+        the synapse's share id already has one on this engine."""
+        sid = -1 if share_ids is None else int(share_ids[m, i])
+        if sid >= 0 and sid in shared_addr[j]:
+            addr = shared_addr[j][sid]
+            assert w_entries[j][addr] == float(w[m, i]), \
+                "share id maps to conflicting weight values"
+            return addr
+        addr = int(w_next[j])
+        w_entries[j].append(float(w[m, i]))
+        w_next[j] += 1
+        if sid >= 0:
+            shared_addr[j][sid] = addr
+        return addr
 
     for m in range(n_src):
         dests = np.nonzero(w[m])[0]
@@ -202,9 +253,7 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
                     i = per_engine[j][r]
                     valid[j] = True
                     virt[j] = sol.capacitor[i]
-                    waddr[j] = w_next[j]
-                    w_entries[j].append(float(w[m, i]))
-                    w_next[j] += 1
+                    waddr[j] = alloc(j, m, i)
             rows_valid.append(valid)
             rows_virt.append(virt)
             rows_waddr.append(waddr)
@@ -226,6 +275,7 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
         n_engines=n_engines,
         n_caps=n_caps,
         mapping=sol,
+        n_weight_words=int(sum(len(e) for e in w_entries)),
     )
 
 
@@ -263,12 +313,21 @@ class DispatchStats:
 
 
 def dispatch_simulate(tables: MemTables, spikes: np.ndarray,
-                      n_dest: int) -> tuple[np.ndarray, DispatchStats]:
+                      n_dest: int,
+                      max_events: int | None = None
+                      ) -> tuple[np.ndarray, DispatchStats]:
     """Cycle-level event dispatch for a spike train ``spikes[T, n_src]``.
 
     Returns ``(currents[T, n_dest], stats)`` where ``currents[t, i]`` is the
     synaptic current accumulated into destination neuron i at step t — must
     equal ``spikes[t] @ W`` restricted to assigned neurons (tested).
+
+    ``max_events`` models a finite MEM_E FIFO depth: at most that many
+    events are accepted per step, lowest source index first (hardware FIFO
+    write order), the rest are dropped before dispatch.  ``stats.events``
+    still counts *arrivals*; dispatch work (cycles / rows / MACs / bytes)
+    and ``mem_e_peak`` reflect only accepted events — matching the batched
+    engine's ``events_from_spikes`` truncation exactly.
     """
     t_steps, n_src = spikes.shape
     currents = np.zeros((t_steps, n_dest), dtype=np.float32)
@@ -283,6 +342,8 @@ def dispatch_simulate(tables: MemTables, spikes: np.ndarray,
     for t in range(t_steps):
         src_idx = np.nonzero(spikes[t])[0]
         events[t] = len(src_idx)
+        if max_events is not None:
+            src_idx = src_idx[:max_events]
         mem_e_peak = max(mem_e_peak, len(src_idx))
         for m in src_idx:
             b, a = int(tables.e2a_count[m]), int(tables.e2a_addr[m])
@@ -304,12 +365,17 @@ def dispatch_simulate(tables: MemTables, spikes: np.ndarray,
 
 
 def mem_sn_utilization(tables: MemTables, spikes: np.ndarray,
-                       capacity_rows: int) -> np.ndarray:
+                       capacity_rows: int,
+                       max_events: int | None = None) -> np.ndarray:
     """Fraction of MEM_S&N rows active per time step (Figs 6-7): rows
-    belonging to neurons that spiked at step t over total row capacity."""
+    belonging to neurons that spiked at step t over total row capacity.
+    ``max_events`` applies the same MEM_E acceptance cap as
+    :func:`dispatch_simulate` — dropped events touch no rows."""
     t_steps = spikes.shape[0]
     util = np.zeros(t_steps, dtype=np.float64)
     for t in range(t_steps):
         src_idx = np.nonzero(spikes[t])[0]
+        if max_events is not None:
+            src_idx = src_idx[:max_events]
         util[t] = tables.e2a_count[src_idx].sum() / max(capacity_rows, 1)
     return util

@@ -28,7 +28,10 @@ events add an exact ``0.0`` — so even the float32 partial sums agree.
 Data layout (see README "Batched engine"):
 
   PackedModel.layers[l].rounds[r].tables   PackedTables (padded i32 pytree)
-  PackedModel.layers[l].rounds[r].w_dense  f32 [n_src, n_dest_pad]
+  PackedModel.layers[l].rounds[r].w_dense  f32 [n_src, n_dest_pad]  (dense)
+  PackedModel.layers[l].rounds[r].coo_*    i32/f32 [nnz]  (shared-weight /
+                                           conv rounds: COO synapse replay,
+                                           scattered on device under jit)
   events                                   i32 [B*T, E]   (pad = -1)
   currents                                 f32 [B, T, n_dest_pad]
 """
@@ -66,12 +69,28 @@ def _pad_dest(n_dest: int, block_d: int) -> int:
 
 @dataclasses.dataclass
 class PackedRound:
+    """One capacitor-assignment round on the device.
+
+    Dense layers carry ``w_dense`` (the replayed effective-weight matrix).
+    Shared-weight (conv) layers instead carry a COO indirection —
+    ``(coo_src, coo_dest, coo_val)`` synapse triplets replayed from the
+    control memories in O(nnz) — so packing never materializes the
+    ``n_src x n_dest`` unrolled matrix on the host; the device scatters the
+    triplets into the kernel's weight tile under jit.  Exactly one of the
+    two representations is set (``None`` fields are empty pytree nodes).
+    """
+
     tables: PackedTables
-    w_dense: jax.Array      # f32 [n_src, n_dest_pad], global (padded) columns
+    w_dense: jax.Array | None       # f32 [n_src, n_dest_pad], global columns
+    coo_src: jax.Array | None = None    # i32 [nnz]
+    coo_dest: jax.Array | None = None   # i32 [nnz], global (padded) columns
+    coo_val: jax.Array | None = None    # f32 [nnz]
 
 
 jax.tree_util.register_dataclass(
-    PackedRound, data_fields=["tables", "w_dense"], meta_fields=[])
+    PackedRound,
+    data_fields=["tables", "w_dense", "coo_src", "coo_dest", "coo_val"],
+    meta_fields=[])
 
 
 @dataclasses.dataclass
@@ -114,18 +133,30 @@ jax.tree_util.register_dataclass(
 def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedModel:
     """Build the device-ready pytree from a mapped model.  The effective
     weights are replayed from the control memories (``MemTables
-    .dense_weights``), not taken from the original matrices — the batched
-    engine executes what is actually in the SRAM."""
+    .dense_weights`` / ``.replay_coo``), not taken from the original
+    matrices — the batched engine executes what is actually in the SRAM.
+    Shared-weight (conv) layers replay as COO triplets so the host never
+    materializes the unrolled ``n_src x n_dest`` matrix per layer."""
     layers = []
     for layer in model.layers:
         n_dest_pad = _pad_dest(layer.n_dest, block_d)
+        shared = getattr(layer, "shared_weights", False)
         rounds = []
         for rnd in layer.rounds:
-            w_local = rnd.tables.dense_weights(len(rnd.neuron_ids))
-            w_glob = np.zeros((layer.n_src, n_dest_pad), dtype=np.float32)
-            w_glob[:, rnd.neuron_ids] = w_local
-            rounds.append(PackedRound(tables=rnd.tables.to_jax(),
-                                      w_dense=jnp.asarray(w_glob)))
+            if shared:
+                src, dest_local, vals = rnd.tables.replay_coo()
+                dest = rnd.neuron_ids[dest_local]
+                rounds.append(PackedRound(
+                    tables=rnd.tables.to_jax(), w_dense=None,
+                    coo_src=jnp.asarray(src, dtype=jnp.int32),
+                    coo_dest=jnp.asarray(dest, dtype=jnp.int32),
+                    coo_val=jnp.asarray(vals)))
+            else:
+                w_local = rnd.tables.dense_weights(len(rnd.neuron_ids))
+                w_glob = np.zeros((layer.n_src, n_dest_pad), dtype=np.float32)
+                w_glob[:, rnd.neuron_ids] = w_local
+                rounds.append(PackedRound(tables=rnd.tables.to_jax(),
+                                          w_dense=jnp.asarray(w_glob)))
         layers.append(PackedLayer(rounds=rounds, n_src=layer.n_src,
                                   n_dest=layer.n_dest, n_dest_pad=n_dest_pad))
     return PackedModel(layers=layers, lif=model.lif, spec=model.spec,
@@ -152,6 +183,24 @@ def _lif_scan(currents: jax.Array, lif: LIFParams) -> jax.Array:
     return spikes.transpose(1, 0, 2)
 
 
+def _layer_weights(layer: PackedLayer) -> jax.Array:
+    """Fuse a layer's rounds into one ``[n_src, n_dest_pad]`` weight tile
+    for the event_synapse kernel.  Dense rounds add; COO (shared-weight)
+    rounds scatter their synapse triplets — on device, under jit, O(nnz).
+    Rounds target disjoint destination columns and each (src, dest) pair
+    occurs at most once, so addition order cannot change any bit."""
+    dense = [r.w_dense for r in layer.rounds if r.w_dense is not None]
+    coo = [r for r in layer.rounds if r.w_dense is None]
+    w = functools.reduce(jnp.add, dense) if dense else \
+        jnp.zeros((layer.n_src, layer.n_dest_pad), jnp.float32)
+    if coo:
+        src = jnp.concatenate([r.coo_src for r in coo])
+        dest = jnp.concatenate([r.coo_dest for r in coo])
+        val = jnp.concatenate([r.coo_val for r in coo])
+        w = w.at[src, dest].add(val)
+    return w
+
+
 @functools.partial(jax.jit, static_argnames=("max_events",))
 def _forward(packed: PackedModel, spikes: jax.Array,
              max_events: int | None) -> list[jax.Array]:
@@ -166,7 +215,7 @@ def _forward(packed: PackedModel, spikes: jax.Array,
         events = ops.events_from_spikes(spikes.reshape(b * t, layer.n_src),
                                         _mem_e_depth(layer, max_events))
         # rounds target disjoint destination columns -> one fused kernel call
-        w = functools.reduce(jnp.add, [r.w_dense for r in layer.rounds])
+        w = _layer_weights(layer)
         currents = ops.event_synapse(events, w, block_d=packed.block_d)
         out = _lif_scan(currents.reshape(b, t, layer.n_dest_pad), packed.lif)
         spikes = out[..., :layer.n_dest]
@@ -225,10 +274,19 @@ def _layer_stats(in_spikes: np.ndarray, layer: PackedLayer,
                  sn_capacity_rows: int | None
                  ) -> tuple[BatchedDispatchStats, np.ndarray, np.ndarray]:
     """Vectorized dispatch accounting for one layer: every per-step counter
-    is a dot product of the (0/1) spike raster with a per-source table
-    vector, reproducing the oracle's Python accumulation in int64."""
+    is a dot product of the accepted-event raster with a per-source table
+    vector, reproducing the oracle's Python accumulation in int64.
+
+    A finite MEM_E depth accepts only the ``depth`` lowest source indices
+    per step (FIFO write order) — dropped events arrive (``events``) but
+    dispatch nothing, exactly as the kernel path truncates them."""
     sp = (in_spikes > 0)
     b, t, _ = sp.shape
+    depth = _mem_e_depth(layer, max_events)
+    if depth >= layer.n_src:
+        keep = sp                       # cap can never bind
+    else:
+        keep = sp & (np.cumsum(sp, axis=2) <= depth)
     shape = (b, t)
     cycles = np.zeros(shape, dtype=np.int64)
     rows = np.zeros(shape, dtype=np.int64)
@@ -239,18 +297,18 @@ def _layer_stats(in_spikes: np.ndarray, layer: PackedLayer,
     cap = sn_capacity_rows or max(total_rows, 1)
     for rnd in layer.rounds:
         rows_v, cyc_v, ops_v = rnd.tables.stats_vectors()
-        r_rows = sp @ rows_v
-        cycles += sp @ cyc_v
+        r_rows = keep @ rows_v
+        cycles += keep @ cyc_v
         rows += r_rows
-        mac += sp @ ops_v
+        mac += keep @ ops_v
         bytes_t += r_rows * rnd.tables.row_bytes
         util += r_rows.astype(np.float64) / cap
     events = sp.sum(axis=2, dtype=np.int64)
-    overflow = np.maximum(events - _mem_e_depth(layer, max_events), 0)
+    overflow = np.maximum(events - depth, 0)
     stats = BatchedDispatchStats(cycles=cycles, rows_touched=rows,
                                  engine_ops=mac, events=events,
                                  sn_bytes_touched=bytes_t,
-                                 mem_e_peak=events.max(axis=1))
+                                 mem_e_peak=np.minimum(events, depth).max(axis=1))
     return stats, util, overflow
 
 
@@ -260,10 +318,12 @@ def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,
                 with_stats: bool = True) -> BatchedRunResult:
     """Execute a batch of spike trains ``[B, T, n_in]`` through the chain.
 
-    Bit-exact vs. the oracle when ``max_events`` is None (or >= every
-    layer's spike count); with a tight ``max_events`` the engine models the
-    finite MEM_E depth — excess events are dropped lowest-priority-last and
-    counted per step in ``result.overflow``.
+    Bit-exact vs. the oracle ``run`` called with the same ``max_events``
+    (tested, including finite caps).  A tight ``max_events`` models the
+    finite MEM_E depth: excess events are dropped lowest-priority-last
+    (ascending source index kept) before dispatch, counted per step in
+    ``result.overflow``, and the loss propagates to downstream layers
+    through the LIF exactly as on the oracle.
 
     ``with_stats=False`` skips the (host-side) accounting — the serving
     configuration, where only the output spikes matter.

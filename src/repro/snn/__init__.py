@@ -1,1 +1,3 @@
 from repro.snn.mlp import SNNConfig, init_snn, snn_forward, snn_loss, train_snn  # noqa: F401
+from repro.snn.conv import (ConvSNNConfig, conv_snn_forward, conv_snn_loss,  # noqa: F401
+                            init_conv_snn, layer_specs, train_conv_snn)

@@ -1,0 +1,228 @@
+"""Spiking CNNs — the convolutional model family MENAGE claims (§III).
+
+Architecture per conv block: ``conv -> LIF -> sum-pool -> LIF``; after the
+blocks, a flatten and one or more dense layers, each followed by LIF.  The
+sum-pool is spiking pooling — a fixed depthwise all-ones window whose LIF
+fires when enough window inputs spiked — because every mapped MX-NEURACORE
+layer ends in its A-NEURON LIF bank; the training graph mirrors the
+hardware structure exactly so a trained model lowers faithfully.
+
+Training shares the MLP machinery: the same ``lif_step`` surrogate-gradient
+cell (:mod:`repro.core.lif`), the same rate decoding (spike counts are the
+logits), the same Adam loop.  Feature maps are NCHW and flatten
+channel-major — the index convention of :mod:`repro.core.layers`, so
+``layer_specs`` hands ``map_model`` a ``[Conv2d, SumPool2d(Conv2d), ...,
+Dense]`` stack with no permutation glue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layers import Conv2d, Dense, LayerSpec, SumPool2d
+from repro.core.lif import LIFParams, lif_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSNNConfig:
+    """A conv->LIF->pool stack with a dense head.
+
+    in_shape:       (C, H, W) of the flattened channel-major spike input
+    conv_channels:  output channels per conv block
+    kernel_size / stride / padding: per conv (shared across blocks)
+    pool:           sum-pool window+stride after each conv block (1 = none)
+    dense_hidden:   hidden dense widths between flatten and the class head
+    """
+
+    in_shape: tuple[int, int, int]
+    conv_channels: tuple[int, ...] = (8, 16)
+    kernel_size: int = 3
+    stride: int = 1
+    padding: int = 1
+    pool: int = 2
+    dense_hidden: tuple[int, ...] = ()
+    num_classes: int = 10
+    lif: LIFParams = LIFParams(beta=0.9, threshold=1.0)
+    num_steps: int = 25
+
+    @staticmethod
+    def cifar10_dvs(down: int = 4, channels: tuple[int, ...] = (8, 16)
+                    ) -> "ConvSNNConfig":
+        """Conv counterpart of the paper's CIFAR10-DVS MLP, on the same
+        synthetic DVS input (2 polarity channels, 128/down square)."""
+        side = 128 // down
+        return ConvSNNConfig(in_shape=(2, side, side), conv_channels=channels)
+
+    @property
+    def n_in(self) -> int:
+        c, h, w = self.in_shape
+        return c * h * w
+
+    def conv_out_hw(self, h: int, w: int) -> tuple[int, int]:
+        """Conv output spatial dims — the single home of the
+        ``(h + 2p - k) // s + 1`` arithmetic (matches Conv2d.out_shape)."""
+        k, s, p = self.kernel_size, self.stride, self.padding
+        return ((h + 2 * p - k) // s + 1, (w + 2 * p - k) // s + 1)
+
+    def feature_shapes(self) -> list[tuple[int, int, int]]:
+        """(C, H, W) entering each conv block, then the final map shape."""
+        shapes = [self.in_shape]
+        _, h, w = self.in_shape
+        for ch in self.conv_channels:
+            h, w = self.conv_out_hw(h, w)
+            if self.pool > 1:
+                h, w = h // self.pool, w // self.pool
+            shapes.append((ch, h, w))
+        return shapes
+
+    def dense_sizes(self) -> tuple[int, ...]:
+        c, h, w = self.feature_shapes()[-1]
+        return (c * h * w, *self.dense_hidden, self.num_classes)
+
+
+def init_conv_snn(key: jax.Array, cfg: ConvSNNConfig) -> list[jax.Array]:
+    """Trainable params, in forward order: OIHW conv kernels then dense
+    matrices (pools are fixed and carry no params).  Kaiming-ish, no bias
+    (the hardware has no bias path)."""
+    params: list[jax.Array] = []
+    c_in = cfg.in_shape[0]
+    k = cfg.kernel_size
+    for c_out in cfg.conv_channels:
+        key, sub = jax.random.split(key)
+        fan_in = c_in * k * k
+        params.append(jax.random.normal(sub, (c_out, c_in, k, k))
+                      * jnp.sqrt(2.0 / fan_in))
+        c_in = c_out
+    sizes = cfg.dense_sizes()
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        params.append(jax.random.normal(sub, (sizes[i], sizes[i + 1]))
+                      * jnp.sqrt(2.0 / sizes[i]))
+    return params
+
+
+def _split_params(params: list[jax.Array], cfg: ConvSNNConfig):
+    n_conv = len(cfg.conv_channels)
+    return params[:n_conv], params[n_conv:]
+
+
+def _sum_pool(x: jax.Array, pool: int) -> jax.Array:
+    """Non-overlapping sum pooling over NCHW maps (the SumPool2d spec)."""
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add,
+                                 (1, 1, pool, pool), (1, 1, pool, pool),
+                                 "VALID")
+
+
+def conv_snn_forward(params: list[jax.Array], spikes: jax.Array,
+                     cfg: ConvSNNConfig):
+    """spikes [T, B, n_in] -> (out_counts [B, n_cls], out_spikes [T, B, n_cls]).
+
+    Per step: conv -> LIF -> sum-pool -> LIF per block, flatten, dense ->
+    LIF per head layer — one LIF membrane carried per mapped layer, the
+    structure ``map_model`` lowers.
+    """
+    convs, denses = _split_params(params, cfg)
+    batch = spikes.shape[1]
+    shapes = cfg.feature_shapes()
+
+    def step(vs, s_t):
+        new_vs = []
+        vi = 0
+        x = s_t.reshape(batch, *cfg.in_shape)
+        for bi, k in enumerate(convs):
+            cur = jax.lax.conv_general_dilated(
+                x, k, window_strides=(cfg.stride, cfg.stride),
+                padding=[(cfg.padding, cfg.padding)] * 2,
+                dimension_numbers=("NCHW", "OIHW", "NCHW"))
+            v, x = lif_step(vs[vi], cur, cfg.lif)
+            new_vs.append(v); vi += 1
+            if cfg.pool > 1:
+                cur = _sum_pool(x, cfg.pool)
+                v, x = lif_step(vs[vi], cur, cfg.lif)
+                new_vs.append(v); vi += 1
+        x = x.reshape(batch, -1)
+        for w in denses:
+            cur = x @ w
+            v, x = lif_step(vs[vi], cur, cfg.lif)
+            new_vs.append(v); vi += 1
+        return new_vs, x
+
+    v0 = []
+    for bi, ch in enumerate(cfg.conv_channels):
+        ph, pw = cfg.conv_out_hw(shapes[bi][1], shapes[bi][2])
+        v0.append(jnp.zeros((batch, ch, ph, pw)))
+        if cfg.pool > 1:
+            v0.append(jnp.zeros((batch, ch, ph // cfg.pool, pw // cfg.pool)))
+    for n in cfg.dense_sizes()[1:]:
+        v0.append(jnp.zeros((batch, n)))
+    _, out_spikes = jax.lax.scan(step, v0, spikes)
+    return out_spikes.sum(axis=0), out_spikes
+
+
+def layer_specs(params: "list[jax.Array] | list[np.ndarray]",
+                cfg: ConvSNNConfig) -> list[LayerSpec]:
+    """Lower trained (possibly pruned) params to the ``map_model`` stack:
+    ``Conv2d`` per conv block, ``SumPool2d`` after it, ``Dense`` per head
+    layer — one spec per MX-NEURACORE, LIF after each, exactly the
+    training graph of :func:`conv_snn_forward`."""
+    convs, denses = _split_params([np.asarray(p) for p in params], cfg)
+    specs: list[LayerSpec] = []
+    shapes = cfg.feature_shapes()
+    for bi, k in enumerate(convs):
+        conv = Conv2d(kernel=k, in_shape=shapes[bi], stride=cfg.stride,
+                      padding=cfg.padding)
+        specs.append(conv)
+        if cfg.pool > 1:
+            specs.append(SumPool2d(conv.out_shape, cfg.pool))
+    for w in denses:
+        specs.append(Dense(w=w))
+    return specs
+
+
+def conv_snn_loss(params, spikes, labels, cfg: ConvSNNConfig):
+    counts, _ = conv_snn_forward(params, spikes, cfg)
+    logp = jax.nn.log_softmax(counts)   # rate code: counts are the logits
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (counts.argmax(-1) == labels).mean()
+    return loss, acc
+
+
+@partial(jax.jit, static_argnames=("cfg", "lr"))
+def _train_step(params, opt_state, spikes, labels, cfg: ConvSNNConfig,
+                lr: float):
+    (loss, acc), grads = jax.value_and_grad(conv_snn_loss, has_aux=True)(
+        params, spikes, labels, cfg)
+    m, v, t = opt_state
+    t = t + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
+                          params, mh, vh)
+    return params, (m, v, t), loss, acc
+
+
+def train_conv_snn(key: jax.Array, cfg: ConvSNNConfig, data_iter, steps: int,
+                   lr: float = 1e-3, log_every: int = 50, params=None):
+    """Adam surrogate-gradient training (paper Table I hyperparameters);
+    ``data_iter`` yields time-major ``(spikes [T, B, n_in], labels [B])``."""
+    if params is None:
+        params = init_conv_snn(key, cfg)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    opt_state = (m, v, jnp.zeros((), jnp.int32))
+    history = []
+    for step in range(steps):
+        spikes, labels = next(data_iter)
+        params, opt_state, loss, acc = _train_step(
+            params, opt_state, spikes, labels, cfg, lr)
+        if step % log_every == 0 or step == steps - 1:
+            history.append((step, float(loss), float(acc)))
+    return params, history

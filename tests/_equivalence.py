@@ -1,0 +1,47 @@
+"""The oracle-vs-engine equivalence contract, as one shared checker.
+
+Every suite that claims "``run_batched`` == ``run``" — the property tests,
+the golden-fixture replays, and the overflow-propagation test — asserts
+through this function, so a new :class:`DispatchStats` field or result
+surface gets covered everywhere by updating one place.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.accelerator import run
+from repro.engine import batched_run as br
+
+STAT_FIELDS = ("cycles", "rows_touched", "engine_ops", "events",
+               "sn_bytes_touched")
+
+
+def assert_oracle_engine_equivalent(model, spikes: np.ndarray,
+                                    max_events: int | None = None,
+                                    tag: str = ""):
+    """Bit-exact equivalence of ``run_batched(model, spikes)`` vs the
+    oracle per sample: output spikes, every DispatchStats field,
+    MEM_S&N utilization, and overflow — under the same MEM_E cap."""
+    res = br.run_batched(model, spikes, max_events=max_events)
+    for b in range(spikes.shape[0]):
+        oracle = run(model, spikes[b], max_events=max_events)
+        ctx = f"{tag} sample {b}"
+        np.testing.assert_array_equal(res.out_spikes[b], oracle.out_spikes,
+                                      err_msg=f"{ctx} spikes")
+        for li, (bs, os_) in enumerate(zip(res.sample_stats(b),
+                                           oracle.per_layer_stats)):
+            for f in STAT_FIELDS:
+                np.testing.assert_array_equal(
+                    getattr(bs, f), getattr(os_, f),
+                    err_msg=f"{ctx} layer {li} {f}")
+            assert bs.mem_e_peak == os_.mem_e_peak, \
+                f"{ctx} layer {li} mem_e_peak"
+        for li in range(len(model.layers)):
+            np.testing.assert_array_equal(
+                res.per_layer_util[li][b], oracle.per_layer_util[li],
+                err_msg=f"{ctx} layer {li} util")
+            np.testing.assert_array_equal(
+                res.overflow[li][b], oracle.overflow[li],
+                err_msg=f"{ctx} layer {li} overflow")
+    return res

@@ -5,3 +5,37 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-goldens", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current model instead of "
+             "comparing against it (review the diff before committing)")
+    parser.addoption(
+        "--durations-budget", type=float, default=None, metavar="SECONDS",
+        help="fail any single test whose call phase exceeds this many "
+             "seconds (the CI time-cap guard; pair with --durations=10)")
+
+
+@pytest.fixture
+def update_goldens(request) -> bool:
+    return request.config.getoption("--update-goldens")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    """CI budget guard: with ``--durations-budget N``, a test whose call
+    phase runs longer than N seconds fails loudly instead of silently
+    growing the suite past the CI time cap.  (A report hook, not an autouse
+    fixture, so hypothesis's function_scoped_fixture health check stays
+    quiet on the property tests.)"""
+    outcome = yield
+    report = outcome.get_result()
+    budget = item.config.getoption("--durations-budget")
+    if (budget is not None and report.when == "call" and report.passed
+            and report.duration > budget):
+        report.outcome = "failed"
+        report.longrepr = (
+            f"{item.nodeid} took {report.duration:.1f}s, over the "
+            f"--durations-budget of {budget:.0f}s — speed it up or split it")

@@ -126,6 +126,28 @@ def test_mem_e_overflow_accounting(rng):
                                       lif_rollout_np(currents, lif))
 
 
+def test_overflow_propagates_to_downstream_layers(rng):
+    """run(max_events=k) and run_batched(max_events=k) agree bit-exactly on
+    a 3-layer stack where the cap binds: the truncated layer-0 event stream
+    changes layer-0 spikes, which changes what layers 1-2 receive — spikes,
+    stats, utilization, and overflow must all match the oracle under the
+    same cap at every depth of the chain."""
+    from _equivalence import assert_oracle_engine_equivalent
+    ws = _pruned_mlp(rng, (14, 12, 10, 6), density=0.8)
+    lif = LIFParams(beta=0.85, threshold=0.5)
+    model = map_model(ws, SPEC, lif=lif)
+    spikes = (rng.random((4, 7, 14)) < 0.6).astype(np.float32)
+    for depth in (0, 2, 5, None):
+        res = assert_oracle_engine_equivalent(model, spikes, max_events=depth,
+                                              tag=f"depth={depth}")
+        # downstream layers must actually see fewer arrivals than uncapped
+        if depth == 2:
+            full = br.run_batched(model, spikes)
+            assert res.per_layer_stats[1].events.sum() \
+                < full.per_layer_stats[1].events.sum(), \
+                "cap on layer 0 did not propagate to layer 1's event stream"
+
+
 def test_zero_mem_e_depth(rng):
     """A zero-depth MEM_E drops every event: silent output, full overflow
     (regression: the Pallas interpret path used to die on an E=0 block)."""

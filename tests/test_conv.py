@@ -1,0 +1,199 @@
+"""Conv layer specs, shared-weight lowering, and the spiking-CNN model.
+
+Covers the conv tentpole end to end: unrolling math vs ``lax.conv``, the
+one-stored-tap-many-rows SRAM sharing, training-graph / lowered-spec
+agreement, and the acceptance case — a *trained* conv model (2 conv layers
++ dense head) on the synthetic CIFAR10-DVS stream executing bit-identically
+on the numpy oracle and the batched engine for a full batch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.accelerator import map_model, reference_forward, run
+from repro.core.energy import AcceleratorSpec
+from repro.core.layers import Conv2d, Dense, SumPool2d, as_layer_spec
+from repro.core.lif import LIFParams
+from repro.core.prune import prune_pytree
+from repro.data.events import EventDatasetConfig, event_batches, \
+    synthetic_event_dataset
+from repro.engine import batched_run as br
+from repro.snn.conv import (ConvSNNConfig, conv_snn_forward, init_conv_snn,
+                            layer_specs, train_conv_snn)
+
+SPEC = AcceleratorSpec("test", n_cores=8, n_engines=4, n_caps=8,
+                       weight_mem_bytes=1 << 16)
+
+
+def _rand_kernel(rng, c_out, c_in, k, density=0.7):
+    kern = rng.normal(0, 0.8, (c_out, c_in, k, k)).astype(np.float32)
+    kern[rng.random(kern.shape) > density] = 0
+    return kern
+
+
+def test_conv2d_unroll_matches_lax_conv(rng):
+    """x @ unroll(conv) == lax.conv for stride/pad combinations."""
+    for stride, pad in [(1, 0), (1, 1), (2, 1), (3, 0)]:
+        kern = _rand_kernel(rng, 3, 2, 3)
+        conv = Conv2d(kernel=kern, in_shape=(2, 7, 7), stride=stride,
+                      padding=pad)
+        x = rng.random((4, 2, 7, 7)).astype(np.float32)
+        ref = jax.lax.conv_general_dilated(
+            jnp.asarray(x), jnp.asarray(kern), (stride, stride),
+            [(pad, pad)] * 2, dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        got = x.reshape(4, -1) @ conv.unroll()
+        np.testing.assert_allclose(
+            got, np.asarray(ref).reshape(4, -1), atol=1e-5,
+            err_msg=f"stride={stride} pad={pad}")
+        assert conv.n_dest == int(np.prod(conv.out_shape))
+
+
+def test_share_ids_name_kernel_taps(rng):
+    """Every unrolled synapse's share id is its kernel tap; equal ids carry
+    equal weights; id count == stored-tap count == unique_weight_bytes."""
+    kern = _rand_kernel(rng, 2, 2, 3, density=0.6)
+    conv = Conv2d(kernel=kern, in_shape=(2, 6, 6), stride=1, padding=1)
+    w, ids = conv.unroll(), conv.share_ids()
+    assert ids.shape == w.shape
+    np.testing.assert_array_equal(ids >= 0, w != 0)
+    flat_k = kern.reshape(-1)
+    nz = ids >= 0
+    np.testing.assert_array_equal(w[nz], flat_k[ids[nz]])
+    assert len(np.unique(ids[nz])) == conv.unique_weight_bytes \
+        == int((kern != 0).sum())
+    # the unrolled synapse count dwarfs the stored taps — the whole point
+    assert int(nz.sum()) > conv.unique_weight_bytes
+
+
+def test_shared_sram_allocation(rng):
+    """After mapping, each engine's A-SYN SRAM holds at most one word per
+    kernel tap — rows share — while dense layers store one word per
+    synapse, byte accounting matching both."""
+    kern = _rand_kernel(rng, 3, 2, 3)
+    conv = Conv2d(kernel=kern, in_shape=(2, 6, 6), stride=1, padding=1)
+    dense = Dense(w=rng.normal(0, 0.7, (conv.n_dest, 6)).astype(np.float32))
+    model = map_model([conv, dense], SPEC)
+    cl, dl = model.layers
+    assert cl.shared_weights and not dl.shared_weights
+    # accounting is over the *quantized* stored tensors (rounding may zero
+    # a small tap), never over unrolled synapses
+    assert cl.weight_bytes == int((np.asarray(cl.layer_spec.kernel) != 0).sum())
+    assert cl.weight_bytes <= int((kern != 0).sum())
+    assert dl.weight_bytes == int((np.asarray(dl.layer_spec.w) != 0).sum())
+    assert dl.weight_bytes <= int((np.asarray(dense.w) != 0).sum())
+    for rnd in cl.rounds:
+        t = rnd.tables
+        used = int(t.sn_valid.sum())                 # synapses in this round
+        words = t.weight_mem.shape[1]                # SRAM words per engine
+        assert words <= cl.weight_bytes, \
+            "an engine stores more words than the kernel has taps"
+        assert used > words, "conv round shows no weight sharing"
+    # physical allocation: one word per tap per engine per round that uses
+    # it — what the budget assert actually guarantees fits
+    assert cl.sram_bytes == sum(r.tables.n_weight_words for r in cl.rounds)
+    assert cl.weight_bytes <= cl.sram_bytes \
+        <= cl.weight_bytes * SPEC.n_engines * len(cl.rounds)
+    assert dl.sram_bytes <= dl.weight_bytes   # dense: assigned synapses
+
+
+def test_map_model_rejects_physical_sram_overflow(rng):
+    """A conv layer can pass the unique-kernel-byte precheck yet exceed the
+    core's SRAM once taps are replicated per engine/round — map_model must
+    reject it (regression for the under-counting budget assert)."""
+    kern = _rand_kernel(rng, 2, 1, 3, density=1.0)   # 18 unique taps
+    conv = Conv2d(kernel=kern, in_shape=(1, 6, 6), stride=1, padding=0)
+    tight = AcceleratorSpec("tight", n_cores=1, n_engines=4, n_caps=8,
+                            weight_mem_bytes=20)     # 18 <= 20 precheck OK
+    with pytest.raises(AssertionError, match="round"):
+        map_model([conv], tight)
+
+
+def test_replay_coo_matches_dense_weights(rng):
+    """The engine's O(nnz) COO replay and the oracle-grade dense replay
+    describe the same synapses, bit for bit."""
+    kern = _rand_kernel(rng, 2, 1, 3)
+    conv = Conv2d(kernel=kern, in_shape=(1, 6, 6), stride=2, padding=1)
+    model = map_model([conv], SPEC)
+    for rnd in model.layers[0].rounds:
+        n_local = len(rnd.neuron_ids)
+        w_dense = rnd.tables.dense_weights(n_local)
+        src, dest, vals = rnd.tables.replay_coo()
+        w_coo = np.zeros_like(w_dense)
+        np.add.at(w_coo, (src, dest), vals)
+        np.testing.assert_array_equal(w_coo, w_dense)
+        # each (src, dest) pair appears at most once
+        assert len(set(zip(src.tolist(), dest.tolist()))) == len(src)
+
+
+def test_sum_pool_is_depthwise_sum(rng):
+    pool = SumPool2d((3, 4, 4), pool=2)
+    assert pool.out_shape == (3, 2, 2)
+    x = rng.random((2, 3, 4, 4)).astype(np.float32)
+    got = (x.reshape(2, -1) @ pool.unroll()).reshape(2, 3, 2, 2)
+    want = x.reshape(2, 3, 2, 2, 2, 2).sum(axis=(3, 5))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert pool.unique_weight_bytes == 3 * 4   # c * pool^2 ones
+
+
+def test_layer_specs_match_training_forward():
+    """The lowered Conv2d/SumPool2d/Dense stack computes the training
+    graph: reference_forward over unrolled specs == conv_snn_forward."""
+    cfg = ConvSNNConfig(in_shape=(2, 8, 8), conv_channels=(4, 6),
+                        num_steps=6, lif=LIFParams(beta=0.8, threshold=0.7))
+    params = init_conv_snn(jax.random.key(0), cfg)
+    specs = layer_specs(params, cfg)
+    assert [type(s).__name__ for s in specs] == \
+        ["Conv2d", "Conv2d", "Conv2d", "Conv2d", "Dense"]
+    key = jax.random.key(1)
+    spikes = (jax.random.uniform(key, (6, 3, cfg.n_in)) < 0.3
+              ).astype(jnp.float32)
+    _, outs = conv_snn_forward(params, spikes, cfg)
+    for b in range(3):
+        ref = reference_forward(specs, cfg.lif, np.asarray(spikes[:, b]))
+        np.testing.assert_allclose(np.asarray(outs[:, b]), ref, atol=1e-5)
+
+
+def test_map_model_rejects_shape_mismatch(rng):
+    conv = Conv2d(kernel=_rand_kernel(rng, 2, 1, 3), in_shape=(1, 5, 5))
+    bad_dense = Dense(w=rng.normal(0, 1, (7, 4)).astype(np.float32))
+    with pytest.raises(AssertionError, match="expects"):
+        map_model([conv, bad_dense], SPEC)
+    with pytest.raises(AssertionError, match="2-D"):
+        as_layer_spec(rng.normal(0, 1, (2, 2, 3, 3)))
+
+
+def test_trained_conv_model_bit_exact_batch():
+    """Acceptance: a trained >=2-conv + dense-head model on the synthetic
+    CIFAR10-DVS stream maps via map_model and run_batched is bit-identical
+    to the oracle for every sample in a batch of 8."""
+    data = EventDatasetConfig.cifar10_dvs_like(down=16)   # 2 x 8 x 8
+    cfg = ConvSNNConfig(in_shape=(2, 8, 8), conv_channels=(4, 8),
+                        num_steps=10)
+    key = jax.random.key(0)
+    spikes, labels = synthetic_event_dataset(data, n_per_class=3, key=key)
+    spikes = spikes[:, :cfg.num_steps]
+    it = event_batches(spikes, labels, batch=8)
+    params, hist = train_conv_snn(jax.random.key(1), cfg, it, steps=6,
+                                  log_every=2)
+    assert np.isfinite(hist[-1][1])
+    pruned, _ = prune_pytree(params, 0.5)
+    specs = layer_specs(pruned, cfg)
+    assert sum(isinstance(s, Conv2d) for s in specs) >= 2
+    model = map_model(specs, SPEC, lif=cfg.lif)
+    assert any(len(l.rounds) > 1 for l in model.layers), \
+        "stack should exercise multi-round conv mapping"
+    batch = spikes[:8]
+    res = br.run_batched(model, batch)
+    assert res.out_spikes.sum() >= 0
+    for b in range(8):
+        oracle = run(model, batch[b])
+        np.testing.assert_array_equal(res.out_spikes[b], oracle.out_spikes,
+                                      err_msg=f"sample {b}")
+        for li, (bs, os_) in enumerate(zip(res.sample_stats(b),
+                                           oracle.per_layer_stats)):
+            np.testing.assert_array_equal(bs.engine_ops, os_.engine_ops,
+                                          err_msg=f"sample {b} layer {li}")
+            np.testing.assert_array_equal(bs.cycles, os_.cycles,
+                                          err_msg=f"sample {b} layer {li}")

@@ -1,0 +1,261 @@
+"""Property-based oracle-equivalence suite.
+
+The contract: for ANY mappable layer stack — dense and conv, multi-round,
+pruned, finite or unbounded MEM_E — ``run_batched`` reproduces the numpy
+oracle ``run`` bit-exactly: output spikes, every :class:`DispatchStats`
+field, MEM_S&N utilization, and overflow counts.
+
+Cases are generated two ways:
+
+  * hypothesis strategies (``test_prop_*``) — the fuzzing front line; they
+    run wherever ``hypothesis`` is installed (CI tier-1) and skip in bare
+    environments.  A falsified case is dumped, already shrunk, into
+    ``tests/golden/equivalence/`` so it replays forever after.
+  * a deterministic seeded sweep (``test_seeded_sweep``) — 48 fixed cases
+    that run everywhere, hypothesis or not.
+
+``tests/golden/equivalence/*.json`` fixtures (committed regressions +
+recorded failures) replay through the exact same builder.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+from _equivalence import assert_oracle_engine_equivalent
+from _hypothesis_compat import given, settings, st
+
+from repro.core.accelerator import map_model
+from repro.core.energy import AcceleratorSpec
+from repro.core.layers import Conv2d, Dense, SumPool2d
+from repro.core.lif import LIFParams
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden" / "equivalence"
+
+
+# ----------------------------------------------------------- case -> model
+
+def build_case(case: dict):
+    """Deterministically build (mapped model, spikes [B, T, n_in]) from a
+    JSON-serializable case descriptor."""
+    rng = np.random.default_rng(case["seed"])
+    spec = AcceleratorSpec("prop", n_cores=len(case["layers"]),
+                           n_engines=case["n_engines"],
+                           n_caps=case["n_caps"],
+                           weight_mem_bytes=1 << 20)
+    specs = []
+    shape = tuple(case["in_shape"])            # (c, h, w); dense uses c*h*w
+    for ld in case["layers"]:
+        if ld["kind"] == "dense":
+            n_in = int(np.prod(shape))
+            w = rng.normal(0, 0.6, (n_in, ld["n_out"]))
+            w[rng.random(w.shape) > ld["density"]] = 0
+            # a dense layer must keep >=1 synapse or the stack goes silent
+            if (w != 0).sum() == 0:
+                w[0, 0] = 0.5
+            specs.append(Dense(w=w.astype(np.float32)))
+            shape = (ld["n_out"], 1, 1)
+        elif ld["kind"] == "conv":
+            k = rng.normal(0, 0.8,
+                           (ld["c_out"], shape[0], ld["k"], ld["k"]))
+            k[rng.random(k.shape) > ld["density"]] = 0
+            if (k != 0).sum() == 0:
+                k[0, 0, 0, 0] = 0.5
+            conv = Conv2d(kernel=k.astype(np.float32), in_shape=shape,
+                          stride=ld["stride"], padding=ld["padding"])
+            specs.append(conv)
+            shape = conv.out_shape
+        elif ld["kind"] == "pool":
+            pool = SumPool2d(shape, ld["pool"])
+            specs.append(pool)
+            shape = pool.out_shape
+        else:
+            raise ValueError(f"unknown layer kind {ld['kind']!r}")
+    lif = LIFParams(beta=case["beta"], threshold=case["threshold"])
+    model = map_model(specs, spec, lif=lif)
+    n_in = specs[0].n_src
+    spikes = (rng.random((case["batch"], case["t"], n_in))
+              < case["p_spike"]).astype(np.float32)
+    return model, spikes
+
+
+def check_case(case: dict):
+    """The property: batched engine == oracle, field for field, bit for
+    bit, for every sample — including under a finite MEM_E depth."""
+    model, spikes = build_case(case)
+    assert_oracle_engine_equivalent(model, spikes,
+                                    max_events=case.get("max_events"))
+
+
+def _record_failure(case: dict):
+    """Persist a falsified case as a replayable regression fixture.  Called
+    on every shrink candidate, but the file is keyed by the case's layer-kind
+    signature and overwritten each time — and hypothesis replays the minimal
+    example last, so what survives is exactly the shrunk counterexample."""
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    sig = "-".join(ld["kind"] for ld in case["layers"])
+    blob = json.dumps(case, sort_keys=True)
+    (GOLDEN_DIR / f"failed_{sig}.json").write_text(blob + "\n")
+
+
+def check_and_record(case: dict):
+    try:
+        check_case(case)
+    except AssertionError:
+        _record_failure(case)
+        raise
+
+
+# ------------------------------------------------------------- strategies
+
+def _dense_case(seed, widths, density, batch, t, p_spike, max_events,
+                engines, caps, beta=0.8, threshold=0.7):
+    return {"seed": seed, "in_shape": [widths[0], 1, 1],
+            "layers": [{"kind": "dense", "n_out": n, "density": density}
+                       for n in widths[1:]],
+            "batch": batch, "t": t, "p_spike": p_spike,
+            "max_events": max_events, "n_engines": engines, "n_caps": caps,
+            "beta": beta, "threshold": threshold}
+
+
+try:
+    import hypothesis  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def dense_cases(draw):
+        n_layers = draw(st.integers(1, 3))
+        widths = [draw(st.integers(3, 20)) for _ in range(n_layers + 1)]
+        return _dense_case(
+            seed=draw(st.integers(0, 2**16)),
+            widths=widths,
+            density=draw(st.floats(0.2, 1.0)),
+            batch=draw(st.integers(1, 4)),
+            t=draw(st.integers(1, 8)),
+            p_spike=draw(st.floats(0.05, 0.8)),
+            # None = unbounded; small = overflow exercised on layer 0+
+            max_events=draw(st.one_of(st.none(), st.integers(0, 6))),
+            engines=draw(st.integers(1, 4)),
+            caps=draw(st.integers(2, 6)),      # widths>caps*engines => rounds
+            beta=draw(st.sampled_from([0.5, 0.8, 0.9])),
+            threshold=draw(st.sampled_from([0.4, 0.7, 1.0])))
+
+    @st.composite
+    def conv_cases(draw):
+        c = draw(st.integers(1, 2))
+        h = draw(st.integers(4, 7))
+        layers = []
+        k = draw(st.integers(2, 3))
+        stride = draw(st.integers(1, 2))
+        padding = draw(st.integers(0, 1))
+        layers.append({"kind": "conv", "c_out": draw(st.integers(1, 3)),
+                       "k": k, "stride": stride, "padding": padding,
+                       "density": draw(st.floats(0.3, 1.0))})
+        oh = (h + 2 * padding - k) // stride + 1
+        if oh >= 2 and draw(st.booleans()):   # pool needs a >=2px map
+            layers.append({"kind": "pool", "pool": 2})
+        if draw(st.booleans()):
+            layers.append({"kind": "conv", "c_out": draw(st.integers(1, 2)),
+                           "k": 2, "stride": 1, "padding": 1,
+                           "density": draw(st.floats(0.3, 1.0))})
+        layers.append({"kind": "dense", "n_out": draw(st.integers(2, 6)),
+                       "density": draw(st.floats(0.4, 1.0))})
+        return {"seed": draw(st.integers(0, 2**16)), "in_shape": [c, h, h],
+                "layers": layers,
+                "batch": draw(st.integers(1, 3)),
+                "t": draw(st.integers(1, 6)),
+                "p_spike": draw(st.floats(0.05, 0.6)),
+                "max_events": draw(st.one_of(st.none(),
+                                             st.integers(0, 10))),
+                "n_engines": draw(st.integers(2, 4)),
+                "n_caps": draw(st.integers(3, 8)),
+                "beta": 0.8, "threshold": draw(st.sampled_from([0.5, 0.9]))}
+else:                           # bare env: decorators below become skips
+    def dense_cases():
+        return None
+
+    def conv_cases():
+        return None
+
+
+@settings(max_examples=120, deadline=None)
+@given(case=dense_cases())
+def test_prop_dense_stacks(case):
+    """run == run_batched on random dense stacks (multi-round, pruned,
+    MEM_E-capped)."""
+    check_and_record(case)
+
+
+@settings(max_examples=80, deadline=None)
+@given(case=conv_cases())
+def test_prop_conv_stacks(case):
+    """run == run_batched on random conv/pool/dense stacks (shared-weight
+    lowering, stride/padding, MEM_E-capped)."""
+    check_and_record(case)
+
+
+# --------------------------------------------- deterministic twin coverage
+
+def _sweep_cases():
+    cases = []
+    for seed in range(16):
+        cases.append(_dense_case(
+            seed=seed, widths=[6 + seed % 7, 30, 5],   # 30 > engines*caps
+            density=0.3 + 0.05 * (seed % 8), batch=2, t=5,
+            p_spike=0.1 + 0.05 * (seed % 10),
+            max_events=None if seed % 3 == 0 else seed % 5,
+            engines=1 + seed % 3, caps=3 + seed % 4))
+    for seed in range(16):
+        cases.append({
+            "seed": 1000 + seed, "in_shape": [1 + seed % 2, 5 + seed % 3,
+                                              5 + seed % 3],
+            "layers": [
+                {"kind": "conv", "c_out": 1 + seed % 3, "k": 2 + seed % 2,
+                 "stride": 1 + seed % 2, "padding": seed % 2,
+                 "density": 0.4 + 0.06 * (seed % 8)},
+                {"kind": "pool", "pool": 2},
+                {"kind": "dense", "n_out": 4, "density": 0.8}],
+            "batch": 2, "t": 4, "p_spike": 0.25,
+            "max_events": None if seed % 2 else 4,
+            "n_engines": 2 + seed % 3, "n_caps": 4 + seed % 3,
+            "beta": 0.8, "threshold": 0.7})
+    for seed in range(16):
+        cases.append({
+            "seed": 2000 + seed, "in_shape": [2, 6, 6],
+            "layers": [
+                {"kind": "conv", "c_out": 2, "k": 3, "stride": 1,
+                 "padding": 1, "density": 0.7},
+                {"kind": "conv", "c_out": 3, "k": 2, "stride": 2,
+                 "padding": 0, "density": 0.9},
+                {"kind": "dense", "n_out": 6, "density": 0.5}],
+            "batch": 3, "t": 4, "p_spike": 0.1 + 0.04 * (seed % 6),
+            "max_events": None if seed % 4 else 8,
+            "n_engines": 3, "n_caps": 5,
+            "beta": 0.9, "threshold": 0.5})
+    return cases
+
+
+@pytest.mark.parametrize("idx", range(48))
+def test_seeded_sweep(idx):
+    """Hypothesis-free twin of the property tests: 48 deterministic cases
+    spanning dense multi-round, conv stride/pad/pool, and MEM_E caps."""
+    check_case(_sweep_cases()[idx])
+
+
+# ------------------------------------------------------- fixture replay
+
+def _fixture_files():
+    return sorted(GOLDEN_DIR.glob("*.json")) if GOLDEN_DIR.exists() else []
+
+
+@pytest.mark.parametrize("path", _fixture_files(),
+                         ids=lambda p: p.stem)
+def test_golden_equivalence_fixtures(path):
+    """Replay committed (and previously falsified) minimized cases."""
+    check_case(json.loads(path.read_text()))

@@ -1,0 +1,105 @@
+"""Golden regression for the energy model + dispatch accounting on the
+``menage_paper`` config (Accel_1 x the N-MNIST MLP shape).
+
+The calibrated energy model is the repo's Table-II claim; silent drift in
+any constant, in the dispatch simulator's cycle accounting, or in the
+table-building path would quietly invalidate it.  This test pins
+``EnergyReport`` and per-layer dispatch/utilization numbers to committed
+JSON goldens.  Legitimate model changes update them explicitly:
+
+    pytest tests/test_golden_energy.py --update-goldens
+
+then review the JSON diff like any other code change.
+
+Determinism: weights and spikes come from ``np.random.default_rng`` (stable
+across platforms by numpy's documented contract) and mapping uses the pure-
+numpy ``greedy`` solver, so the goldens are environment-independent; float
+comparisons still allow 1e-9 relative slack for last-ulp platform noise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs.menage_paper import NMNIST_SNN
+from repro.core.accelerator import map_model, run
+from repro.core.energy import ACCEL_1
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "energy_menage_paper.json"
+RTOL = 1e-9
+
+
+def _build_result():
+    sizes = NMNIST_SNN.layer_sizes            # (2312, 200, 100, 40, 10)
+    rng = np.random.default_rng(0)
+    ws = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 0.5, (sizes[i], sizes[i + 1]))
+        th = np.quantile(np.abs(w), 0.5)      # 50% L1 prune
+        w[np.abs(w) < th] = 0
+        ws.append(w.astype(np.float32))
+    model = map_model(ws, ACCEL_1, lif=NMNIST_SNN.lif, method="greedy")
+    spikes = (np.random.default_rng(1)
+              .random((NMNIST_SNN.num_steps, sizes[0])) < 0.02
+              ).astype(np.float32)
+    return model, run(model, spikes)
+
+
+def _snapshot(model, res) -> dict:
+    energy = dataclasses.asdict(res.energy)
+    layers = []
+    for layer, stats, util in zip(model.layers, res.per_layer_stats,
+                                  res.per_layer_util):
+        layers.append({
+            "rounds": len(layer.rounds),
+            "weight_bytes": layer.weight_bytes,
+            "sram_bytes": layer.sram_bytes,
+            "sn_rows": sum(r.tables.n_rows for r in layer.rounds),
+            "cycles": int(stats.cycles.sum()),
+            "rows_touched": int(stats.rows_touched.sum()),
+            "engine_ops": int(stats.engine_ops.sum()),
+            "events": int(stats.events.sum()),
+            "sn_bytes_touched": int(stats.sn_bytes_touched.sum()),
+            "mem_e_peak": int(stats.mem_e_peak),
+            "utilization": [float(u) for u in util],
+        })
+    return {"energy": energy, "layers": layers,
+            "out_spike_count": int(res.out_spikes.sum())}
+
+
+def _assert_close(path: str, got, want):
+    if isinstance(want, dict):
+        assert isinstance(got, dict) and set(got) == set(want), \
+            f"{path}: keys {sorted(got)} != golden {sorted(want)}"
+        for k in want:
+            _assert_close(f"{path}.{k}", got[k], want[k])
+    elif isinstance(want, list):
+        assert len(got) == len(want), f"{path}: length changed"
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_close(f"{path}[{i}]", g, w)
+    elif isinstance(want, float):
+        assert np.isclose(got, want, rtol=RTOL, atol=0.0), \
+            f"{path}: {got!r} != golden {want!r} (energy-model drift? " \
+            f"rerun with --update-goldens and review the diff)"
+    else:
+        assert got == want, f"{path}: {got!r} != golden {want!r}"
+
+
+def test_energy_golden_menage_paper(update_goldens):
+    model, res = _build_result()
+    snap = _snapshot(model, res)
+    assert snap["out_spike_count"] > 0, "golden scenario went silent"
+    assert snap["energy"]["total_ops"] > 0
+    if update_goldens or not GOLDEN.exists():
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(snap, indent=1, sort_keys=True) + "\n")
+        if not update_goldens:
+            pytest.fail(f"{GOLDEN} did not exist; wrote it — commit the "
+                        f"file and rerun", pytrace=False)
+        return
+    _assert_close("golden", snap, json.loads(GOLDEN.read_text()))
