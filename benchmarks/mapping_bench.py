@@ -1,51 +1,95 @@
 """ILP mapping benchmark (§III-D): solver runtime + optimality gap of the
 greedy heuristic vs the exact solvers across layer sizes; dispatch-cycle
-benefit of ILP load-balancing (the quantity the mapping actually optimizes)."""
+benefit of ILP load-balancing (the quantity the mapping actually optimizes).
+
+Layers are built as :mod:`repro.core.layers` specs — the post-conv-support
+model path — so the bench measures exactly what ``map_model`` solves,
+including a shared-weight conv case (one A-SYN word, many MEM_S&N rows).
+
+  PYTHONPATH=src python benchmarks/mapping_bench.py [--smoke]
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 
-from repro.core.mapping import (MappingProblem, solve_mapping,
-                                solve_mapping_greedy, solve_mapping_reduced_ilp)
+from repro.core.layers import Conv2d, Dense, LayerSpec
+from repro.core.mapping import (MappingProblem, solve_mapping_greedy,
+                                solve_mapping_reduced_ilp)
 from repro.core.memories import build_event_memories
 
 
-def bench_one(n_src, n_dest, m, n, density, seed=0):
+def dense_spec(n_src: int, n_dest: int, density: float, seed: int = 0) -> Dense:
     rng = np.random.default_rng(seed)
     w = rng.normal(size=(n_src, n_dest)).astype(np.float32)
     w[rng.random(w.shape) > density] = 0
-    fanout = np.maximum((w != 0).sum(1) * 0.9, 1).astype(int)
+    return Dense(w=w)
+
+
+def conv_spec(c_in: int, side: int, c_out: int, k: int, density: float,
+              seed: int = 0) -> Conv2d:
+    rng = np.random.default_rng(seed)
+    kern = rng.normal(size=(c_out, c_in, k, k)).astype(np.float32)
+    kern[rng.random(kern.shape) > density] = 0
+    return Conv2d(kernel=kern, in_shape=(c_in, side, side), stride=1,
+                  padding=1)
+
+
+def bench_one(spec: LayerSpec, m: int, n: int, tag: str,
+              fanout_slack: float | None = 0.9,
+              time_limit: float = 5.0) -> dict:
+    """Solve one layer spec's mapping with the reduced ILP and the greedy
+    heuristic; compare assignments, runtime, and resulting MEM_S&N rows
+    (dispatch cycles — what the ILP load-balances)."""
+    w = np.asarray(spec.unroll())
+    share = spec.share_ids()
+    fanout = None
+    if fanout_slack is not None and share is None:
+        fanout = np.maximum((w != 0).sum(1) * fanout_slack, 1).astype(int)
     p = MappingProblem.from_weights(w, m, n, fanout=fanout)
 
     t0 = time.perf_counter()
-    s_ilp = solve_mapping_reduced_ilp(p, time_limit=5.0)
+    s_ilp = solve_mapping_reduced_ilp(p, time_limit=time_limit)
     t_ilp = time.perf_counter() - t0
     t0 = time.perf_counter()
     s_gr = solve_mapping_greedy(p)
     t_gr = time.perf_counter() - t0
 
     # dispatch-cycle quality: total MEM_S&N rows (cycles) per solution
-    rows_ilp = build_event_memories(w, s_ilp, m, n).n_rows
-    rows_gr = build_event_memories(w, s_gr, m, n).n_rows
+    rows_ilp = build_event_memories(w, s_ilp, m, n, share_ids=share).n_rows
+    rows_gr = build_event_memories(w, s_gr, m, n, share_ids=share).n_rows
     return {
-        "size": f"{n_src}x{n_dest}_M{m}N{n}",
+        "size": f"{tag}_{spec.n_src}x{spec.n_dest}_M{m}N{n}",
         "ilp_assigned": s_ilp.n_assigned, "greedy_assigned": s_gr.n_assigned,
         "ilp_ms": t_ilp * 1e3, "greedy_ms": t_gr * 1e3,
         "ilp_rows": rows_ilp, "greedy_rows": rows_gr,
     }
 
 
+def cases(smoke: bool):
+    if smoke:
+        yield bench_one(dense_spec(64, 40, 0.5), 10, 16, "dense")
+        yield bench_one(conv_spec(2, 6, 3, 3, 0.6), 10, 16, "conv",
+                        fanout_slack=None)
+        return
+    yield bench_one(dense_spec(64, 40, 0.5), 10, 16, "dense")
+    yield bench_one(dense_spec(128, 64, 0.5, seed=1), 10, 16, "dense")
+    yield bench_one(dense_spec(200, 100, 0.4, seed=2), 20, 32, "dense")
+    yield bench_one(conv_spec(2, 8, 4, 3, 0.6), 10, 16, "conv",
+                    fanout_slack=None)
+    yield bench_one(conv_spec(4, 10, 8, 3, 0.5, seed=1), 20, 32, "conv",
+                    fanout_slack=None)
+
+
 def main():
-    cases = [
-        (64, 40, 10, 16, 0.5),
-        (128, 64, 10, 16, 0.5),
-        (200, 100, 20, 32, 0.4),
-    ]
-    for c in cases:
-        r = bench_one(*c)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="two small cases (CI drift guard)")
+    args = ap.parse_args()
+    for r in cases(args.smoke):
         gap = r["ilp_assigned"] - r["greedy_assigned"]
         print(f"mapping/{r['size']},ilp_ms={r['ilp_ms']:.1f},"
               f"greedy_ms={r['greedy_ms']:.1f},"

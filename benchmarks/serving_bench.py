@@ -1,0 +1,94 @@
+"""End-to-end serving benchmark for the bucketed sharded engine path.
+
+Drives variable-length event-stream traffic (MLP and conv models) through
+``run_bucketed`` -> ``run_sharded`` on the host mesh and writes
+``BENCH_serving.json``: events/s, spikes/s, p50/p99 per-bucket step latency,
+and the jit-trace count — the serving perf trajectory CI records per PR.
+
+  PYTHONPATH=src python benchmarks/serving_bench.py [--smoke] \
+      [--out BENCH_serving.json] [--spoof-devices 2]
+
+Gates (CI fails loudly on regression):
+  * the hot pass must not retrace (jit cache stable across mixed shapes);
+  * total traces per model stay <= the policy's bucket count;
+  * a spot request is bit-exact vs single-device ``run_batched``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch._spoof import (assert_spoof_applied,
+                                 spoof_devices_from_argv)
+
+_SPOOFED = spoof_devices_from_argv()  # before any jax import in this process
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.engine import BucketPolicy, run_batched, trace_count  # noqa: E402
+from repro.engine.sharded_run import snn_serve_mesh  # noqa: E402
+from repro.launch.serve_snn import (build_demo_model, serve_stream,  # noqa: E402
+                                    synth_requests)
+
+
+def bench_model(kind: str, *, smoke: bool, mesh, seed: int = 0) -> dict:
+    model = build_demo_model(kind, smoke=smoke, seed=seed)
+    packed = model.pack()
+    n_req = 24 if smoke else 96
+    streams = synth_requests(n_req, packed.n_in,
+                             t_hi=12 if smoke else 30, seed=seed + 1)
+    policy = BucketPolicy.covering([s.shape[0] for s in streams],
+                                   n_shards=mesh.size,
+                                   max_batch=4 * mesh.size)
+    n0 = trace_count()
+    _, warm = serve_stream(packed, streams, policy=policy, mesh=mesh)
+    results, hot = serve_stream(packed, streams, policy=policy, mesh=mesh)
+    traces_total = trace_count() - n0
+    assert hot["new_traces"] == 0, \
+        f"{kind}: hot serving pass retraced ({hot['new_traces']} traces)"
+    assert traces_total <= policy.n_buckets, \
+        f"{kind}: {traces_total} traces > {policy.n_buckets} buckets"
+    # bit-exactness spot check: the longest request, served alone
+    i = int(np.argmax([s.shape[0] for s in streams]))
+    alone = run_batched(packed, streams[i][None], with_stats=False)
+    assert np.array_equal(results[i].out_spikes, alone.out_spikes[0]), \
+        f"{kind}: bucketed serving != run_batched on request {i}"
+    row = {"model": kind, "n_shards": mesh.size,
+           "requests": hot["requests"], "engine_steps": hot["engine_steps"],
+           "events_per_s": hot["events_per_s"],
+           "spikes_per_s": hot["spikes_per_s"],
+           "p50_step_ms": hot["p50_step_ms"],
+           "p99_step_ms": hot["p99_step_ms"],
+           "traces": traces_total, "n_buckets": policy.n_buckets,
+           "warm_wall_s": warm["wall_s"], "hot_wall_s": hot["wall_s"]}
+    print(f"serving/{kind},events_per_s={row['events_per_s']:.0f},"
+          f"spikes_per_s={row['spikes_per_s']:.0f},"
+          f"p50_ms={row['p50_step_ms']:.2f},p99_ms={row['p99_step_ms']:.2f},"
+          f"traces={traces_total}/{policy.n_buckets},shards={mesh.size}")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--data", type=int, default=None)
+    ap.add_argument("--spoof-devices", type=int, default=None)
+    args = ap.parse_args()
+    assert_spoof_applied(_SPOOFED)
+    mesh = snn_serve_mesh(args.data)
+    rows = [bench_model(kind, smoke=args.smoke, mesh=mesh)
+            for kind in ("mlp", "conv")]
+    blob = {"bench": "serving", "smoke": args.smoke,
+            "backend": jax.default_backend(),
+            "n_devices": len(jax.devices()), "models": rows}
+    with open(args.out, "w") as f:
+        json.dump(blob, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,7 @@ from repro.core.energy import ACCEL_1, ACCEL_2
 from repro.core.prune import prune_pytree
 from repro.core.quant import quantize_pytree
 from repro.data.events import event_batches, synthetic_event_dataset
-from repro.engine.batched_run import run_batched
+from repro.engine import BucketPolicy, run_bucketed, trace_count
 from repro.snn.conv import conv_snn_forward, layer_specs, train_conv_snn
 from repro.snn.mlp import init_snn, snn_forward, snn_loss, train_snn
 from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
@@ -52,13 +52,17 @@ def main_conv(args):
         print(f"  layer {li}: {layer.n_src}->{layer.n_dest} "
               f"rounds={len(layer.rounds)} sram={layer.sram_bytes}B "
               f"(unique {layer.weight_bytes}B) shared={layer.shared_weights}")
-    batch = run_batched(model, spikes[:4])
+    # serve the test clips through the bucketed engine (bounded jit cache)
+    policy = BucketPolicy(batch_sizes=(4,), time_steps=(cfg.num_steps,))
+    n0 = trace_count()
+    served = run_bucketed(model, list(spikes[:4]), policy=policy)
     res = run(model, spikes[0])
-    for b in range(batch.batch):
-        assert (batch.out_spikes[b] == run(model, spikes[b]).out_spikes).all(), \
+    for b, r in enumerate(served):
+        assert (r.out_spikes == run(model, spikes[b]).out_spikes).all(), \
             f"engine diverged from oracle on sample {b}"
     print(f"Accel_2 conv execution: {res.energy.tops_per_w:.2f} TOPS/W "
-          f"(oracle == batched engine on {batch.batch} samples)")
+          f"(oracle == bucketed engine on {len(served)} samples, "
+          f"{trace_count() - n0} trace(s))")
 
 
 def main():

@@ -169,9 +169,18 @@ _trace_count = 0
 
 
 def trace_count() -> int:
-    """How many times the jitted forward has been (re)traced — the jit
-    cache-stability probe used by tests and benchmarks."""
+    """How many times a jitted engine forward has been (re)traced — the jit
+    cache-stability probe used by tests and benchmarks.  Covers both the
+    single-device ``run_batched`` path and the ``run_sharded`` mesh path
+    (:mod:`repro.engine.sharded_run`), which bumps the same counter."""
     return _trace_count
+
+
+def _bump_trace() -> None:
+    """Called from inside traced function bodies: python side effects execute
+    exactly once per (re)trace, which is precisely what we want to count."""
+    global _trace_count
+    _trace_count += 1
 
 
 def _lif_scan(currents: jax.Array, lif: LIFParams) -> jax.Array:
@@ -201,14 +210,14 @@ def _layer_weights(layer: PackedLayer) -> jax.Array:
     return w
 
 
-@functools.partial(jax.jit, static_argnames=("max_events",))
-def _forward(packed: PackedModel, spikes: jax.Array,
-             max_events: int | None) -> list[jax.Array]:
+def _forward_impl(packed: PackedModel, spikes: jax.Array,
+                  max_events: int | None) -> list[jax.Array]:
     """Per-layer output spike trains ([B, T, n_dest] each; the last entry is
     the model output).  Dispatch = MEM_E write + event_synapse kernel; LIF =
-    one scan per layer."""
-    global _trace_count
-    _trace_count += 1
+    one scan per layer.  Pure traced body — shared verbatim by the jitted
+    single-device entry below and the per-shard body of
+    :func:`repro.engine.sharded_run.run_sharded`, which is what makes the
+    mesh path bit-exact by construction."""
     b, t, _ = spikes.shape
     outs = []
     for layer in packed.layers:
@@ -221,6 +230,13 @@ def _forward(packed: PackedModel, spikes: jax.Array,
         spikes = out[..., :layer.n_dest]
         outs.append(spikes)
     return outs
+
+
+@functools.partial(jax.jit, static_argnames=("max_events",))
+def _forward(packed: PackedModel, spikes: jax.Array,
+             max_events: int | None) -> list[jax.Array]:
+    _bump_trace()
+    return _forward_impl(packed, spikes, max_events)
 
 
 # ------------------------------------------------------------ batched result
@@ -308,31 +324,18 @@ def _layer_stats(in_spikes: np.ndarray, layer: PackedLayer,
     stats = BatchedDispatchStats(cycles=cycles, rows_touched=rows,
                                  engine_ops=mac, events=events,
                                  sn_bytes_touched=bytes_t,
-                                 mem_e_peak=np.minimum(events, depth).max(axis=1))
+                                 mem_e_peak=np.minimum(events, depth)
+                                 .max(axis=1, initial=0))
     return stats, util, overflow
 
 
-def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,
-                *, max_events: int | None = None,
-                sn_capacity_rows: int | None = None,
-                with_stats: bool = True) -> BatchedRunResult:
-    """Execute a batch of spike trains ``[B, T, n_in]`` through the chain.
-
-    Bit-exact vs. the oracle ``run`` called with the same ``max_events``
-    (tested, including finite caps).  A tight ``max_events`` models the
-    finite MEM_E depth: excess events are dropped lowest-priority-last
-    (ascending source index kept) before dispatch, counted per step in
-    ``result.overflow``, and the loss propagates to downstream layers
-    through the LIF exactly as on the oracle.
-
-    ``with_stats=False`` skips the (host-side) accounting — the serving
-    configuration, where only the output spikes matter.
-    """
-    packed = model if isinstance(model, PackedModel) else model.pack()
-    spikes = jnp.asarray(np.asarray(in_spikes, dtype=np.float32))
-    assert spikes.ndim == 3 and spikes.shape[2] == packed.n_in, \
-        f"expected [B, T, {packed.n_in}], got {spikes.shape}"
-    layer_outs = _forward(packed, spikes, max_events)
+def _finalize(packed: PackedModel, in_spikes: np.ndarray,
+              layer_outs: list[jax.Array], max_events: int | None,
+              sn_capacity_rows: int | None,
+              with_stats: bool) -> BatchedRunResult:
+    """Device outputs -> :class:`BatchedRunResult`, including the host-side
+    dispatch accounting.  Shared by ``run_batched`` and ``run_sharded`` so
+    the two entry points cannot drift apart on the stats surface."""
     out = np.asarray(layer_outs[-1])
     if not with_stats:
         return BatchedRunResult(out_spikes=out, per_layer_stats=[],
@@ -350,3 +353,31 @@ def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,
     return BatchedRunResult(out_spikes=out, per_layer_stats=stats_all,
                             per_layer_util=util_all, overflow=drop_all,
                             spec=packed.spec)
+
+
+def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,
+                *, max_events: int | None = None,
+                sn_capacity_rows: int | None = None,
+                with_stats: bool = True) -> BatchedRunResult:
+    """Execute a batch of spike trains ``[B, T, n_in]`` through the chain.
+
+    Bit-exact vs. the oracle ``run`` called with the same ``max_events``
+    (tested, including finite caps).  A tight ``max_events`` models the
+    finite MEM_E depth: excess events are dropped lowest-priority-last
+    (ascending source index kept) before dispatch, counted per step in
+    ``result.overflow``, and the loss propagates to downstream layers
+    through the LIF exactly as on the oracle.
+
+    Degenerate shapes are valid inputs: ``B=0`` returns an empty result
+    (empty stats arrays, no crash), ``T=1`` and all-silent batches follow
+    the ordinary path.  ``with_stats=False`` skips the (host-side)
+    accounting — the serving configuration, where only the output spikes
+    matter.
+    """
+    packed = model if isinstance(model, PackedModel) else model.pack()
+    spikes = jnp.asarray(np.asarray(in_spikes, dtype=np.float32))
+    assert spikes.ndim == 3 and spikes.shape[2] == packed.n_in, \
+        f"expected [B, T, {packed.n_in}], got {spikes.shape}"
+    layer_outs = _forward(packed, spikes, max_events)
+    return _finalize(packed, np.asarray(in_spikes, dtype=np.float32),
+                     layer_outs, max_events, sn_capacity_rows, with_stats)

@@ -1,0 +1,241 @@
+"""Continuous-batching front end: variable-length event streams -> buckets.
+
+Production DVS traffic is a stream of requests, each its own spike train
+``[T_i, n_in]`` with its own duration.  Feeding those shapes straight into
+``run_batched`` / ``run_sharded`` retraces the jit on every distinct
+``(B, T)`` — the cache-churn bug this module fixes.  Instead, a
+:class:`BucketPolicy` fixes a small grid of padded ``(B, T)`` shapes; the
+scheduler groups pending requests by time bucket, chunks them into batch
+buckets, zero-pads, runs, and slices each request's exact result back out.
+
+Why padding is free (bit-wise): the LIF scan is causal, so zero-current
+steps appended after ``T_i`` cannot change steps ``< T_i``; zero batch rows
+are independent samples that get discarded.  Every per-request result —
+output spikes, per-step DispatchStats, utilization, overflow, energy — is
+therefore bit-identical to running that request alone at its native shape,
+and hence to the numpy oracle (tested, ``tests/test_serving.py``).
+
+The jit cache is bounded by construction: at most ``policy.n_buckets``
+distinct shapes ever reach the engine, verified through the existing
+``trace_count()`` probe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.energy import EnergyReport, energy_model
+from repro.core.memories import DispatchStats
+from repro.engine import batched_run as br
+from repro.engine.sharded_run import run_sharded
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """The fixed ``(B, T)`` shape grid the engine is allowed to see.
+
+    ``batch_sizes`` and ``time_steps`` are ascending; a request of length
+    ``T_i`` lands in the smallest time bucket ``>= T_i``, and a chunk of
+    ``k`` requests pads to the smallest batch bucket ``>= k`` (chunks are
+    capped at ``max_batch``).  ``n_buckets`` bounds the jit-trace count.
+    """
+
+    batch_sizes: tuple[int, ...] = (1, 4, 16)
+    time_steps: tuple[int, ...] = (8, 16, 32)
+
+    def __post_init__(self):
+        for name in ("batch_sizes", "time_steps"):
+            v = getattr(self, name)
+            assert v and all(x > 0 for x in v) and list(v) == sorted(set(v)), \
+                f"{name} must be ascending unique positive ints, got {v}"
+
+    @property
+    def max_batch(self) -> int:
+        return self.batch_sizes[-1]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.batch_sizes) * len(self.time_steps)
+
+    def t_bucket(self, t: int) -> int:
+        for tb in self.time_steps:
+            if t <= tb:
+                return tb
+        raise ValueError(
+            f"request of {t} steps exceeds the largest time bucket "
+            f"{self.time_steps[-1]}; extend the policy "
+            f"(BucketPolicy.covering picks buckets from observed lengths)")
+
+    def b_bucket(self, b: int) -> int:
+        assert 0 < b <= self.max_batch
+        for bb in self.batch_sizes:
+            if b <= bb:
+                return bb
+        raise AssertionError  # unreachable: b <= max_batch
+
+    @classmethod
+    def covering(cls, lengths, *, n_shards: int = 1,
+                 max_batch: int = 16) -> "BucketPolicy":
+        """A policy whose time buckets are the powers of two covering the
+        observed request ``lengths`` and whose batch buckets are powers of
+        two up to ``max_batch``, each rounded up to a multiple of
+        ``n_shards`` (so every bucket splits evenly on the serving mesh)."""
+        t_max = max(int(t) for t in lengths)
+        steps, t = [], 1
+        while t < t_max:
+            t *= 2
+        for tb in (max(t // 4, 1), max(t // 2, 1), t):
+            if tb not in steps:
+                steps.append(tb)
+        bs, b = [], 1
+        while b < max_batch:
+            bs.append(_round_up(b, n_shards))
+            b *= 4
+        bs.append(_round_up(max_batch, n_shards))
+        return cls(batch_sizes=tuple(sorted(set(bs))),
+                   time_steps=tuple(sorted(set(steps))))
+
+    @classmethod
+    def for_mesh(cls, n_shards: int,
+                 batch_sizes: tuple[int, ...] = (1, 4, 16),
+                 time_steps: tuple[int, ...] = (8, 16, 32)) -> "BucketPolicy":
+        """Round every batch bucket up to a multiple of the mesh's data-axis
+        extent so ``run_sharded`` always gets a divisible batch."""
+        return cls(batch_sizes=tuple(sorted({_round_up(b, n_shards)
+                                             for b in batch_sizes})),
+                   time_steps=tuple(time_steps))
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """One engine call: which requests ride it and the padded shape."""
+
+    indices: tuple[int, ...]
+    b_pad: int
+    t_pad: int
+
+
+def plan_batches(lengths, policy: BucketPolicy) -> list[BatchPlan]:
+    """Deterministic scheduler: group requests by time bucket (arrival order
+    preserved within a bucket), chunk each group at ``max_batch``, pad each
+    chunk's batch to its batch bucket.  Every index appears exactly once."""
+    groups: dict[int, list[int]] = {}
+    for i, t in enumerate(lengths):
+        assert t > 0, f"request {i} has {t} time steps"
+        groups.setdefault(policy.t_bucket(int(t)), []).append(i)
+    plans = []
+    for t_pad in sorted(groups):
+        idxs = groups[t_pad]
+        for lo in range(0, len(idxs), policy.max_batch):
+            chunk = idxs[lo:lo + policy.max_batch]
+            plans.append(BatchPlan(indices=tuple(chunk),
+                                   b_pad=policy.b_bucket(len(chunk)),
+                                   t_pad=t_pad))
+    return plans
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One request's slice of a bucketed run — the same surfaces as the
+    oracle :class:`repro.core.accelerator.RunResult`, bit-exact."""
+
+    out_spikes: np.ndarray                      # [T_i, n_out]
+    stats: list[DispatchStats]                  # per layer (empty w/o stats)
+    util: list[np.ndarray]                      # [T_i] per layer
+    overflow: list[np.ndarray]                  # [T_i] per layer
+    spec: object = None
+
+    def energy(self, frame_cycles: int | None = "default") -> EnergyReport:
+        assert self.spec is not None and self.stats, \
+            "energy needs with_stats=True and an AcceleratorSpec"
+        if frame_cycles == "default":
+            return energy_model(self.spec, self.stats)
+        return energy_model(self.spec, self.stats, frame_cycles=frame_cycles)
+
+
+def _slice_request(res: "br.BatchedRunResult", row: int, t: int,
+                   with_stats: bool) -> RequestResult:
+    out = res.out_spikes[row, :t]
+    if not with_stats:
+        return RequestResult(out_spikes=out, stats=[], util=[], overflow=[],
+                             spec=res.spec)
+    stats = []
+    for bs in res.per_layer_stats:
+        full = bs.sample(row)
+        stats.append(DispatchStats(
+            cycles=full.cycles[:t], rows_touched=full.rows_touched[:t],
+            engine_ops=full.engine_ops[:t], events=full.events[:t],
+            sn_bytes_touched=full.sn_bytes_touched[:t],
+            # padded steps are silent -> they contribute 0 to the peak
+            mem_e_peak=full.mem_e_peak))
+    return RequestResult(
+        out_spikes=out, stats=stats,
+        util=[u[row, :t] for u in res.per_layer_util],
+        overflow=[o[row, :t] for o in res.overflow],
+        spec=res.spec)
+
+
+def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
+                 mesh=None, max_events: int | None = None,
+                 sn_capacity_rows: int | None = None,
+                 with_stats: bool = True,
+                 telemetry: list | None = None) -> list[RequestResult]:
+    """Serve a list of variable-length spike streams (``[T_i, n_in]`` each)
+    through the bucketed engine; results come back in request order.
+
+    ``policy`` defaults to :meth:`BucketPolicy.covering` over the observed
+    lengths (divisibility-adjusted when ``mesh`` is given).  ``mesh`` routes
+    execution through :func:`run_sharded`; ``None`` serves single-device.
+    ``telemetry``, if a list, receives one dict per engine call (padded
+    shape, request count, events served, wall seconds) — the hook
+    ``benchmarks/serving_bench.py`` uses for p50/p99 step latencies.
+    """
+    packed = model if isinstance(model, br.PackedModel) else model.pack()
+    streams = [np.asarray(s, dtype=np.float32) for s in streams]
+    for i, s in enumerate(streams):
+        assert s.ndim == 2 and s.shape[1] == packed.n_in, \
+            f"request {i}: expected [T, {packed.n_in}], got {s.shape}"
+    if not streams:
+        return []
+    if policy is None:
+        policy = BucketPolicy.covering(
+            [s.shape[0] for s in streams],
+            n_shards=mesh.size if mesh is not None else 1)
+    results: list[RequestResult | None] = [None] * len(streams)
+    for plan in plan_batches([s.shape[0] for s in streams], policy):
+        padded = np.zeros((plan.b_pad, plan.t_pad, packed.n_in),
+                          dtype=np.float32)
+        for row, i in enumerate(plan.indices):
+            padded[row, :streams[i].shape[0]] = streams[i]
+        t0 = time.perf_counter()
+        if mesh is None:
+            res = br.run_batched(packed, padded, max_events=max_events,
+                                 sn_capacity_rows=sn_capacity_rows,
+                                 with_stats=with_stats)
+        else:
+            res = run_sharded(packed, padded, mesh=mesh,
+                              max_events=max_events,
+                              sn_capacity_rows=sn_capacity_rows,
+                              with_stats=with_stats)
+        dt = time.perf_counter() - t0
+        if telemetry is not None:
+            telemetry.append({
+                "b_pad": plan.b_pad, "t_pad": plan.t_pad,
+                "n_requests": len(plan.indices),
+                "events": int(sum((streams[i] > 0).sum()
+                                  for i in plan.indices)),
+                "out_spikes": int(sum(
+                    res.out_spikes[row, :streams[i].shape[0]].sum()
+                    for row, i in enumerate(plan.indices))),
+                "seconds": dt})
+        for row, i in enumerate(plan.indices):
+            results[i] = _slice_request(res, row, streams[i].shape[0],
+                                        with_stats)
+    return results  # type: ignore[return-value]

@@ -53,7 +53,10 @@ def event_synapse(events: jax.Array, weights: jax.Array,
     currents [B, n_dest] f32."""
     b, n_events = events.shape
     n_src, n_dest = weights.shape
-    if n_events == 0:  # static zero-depth MEM_E: nothing dispatches
+    if n_events == 0 or b == 0:
+        # static zero-depth MEM_E (nothing dispatches) or an empty batch —
+        # a zero-size grid still asks pallas for a (1, E) block slice of the
+        # (0, E) events operand, so short-circuit before the kernel
         return jnp.zeros((b, n_dest), weights.dtype)
     bd = min(block_d, n_dest)
     assert n_dest % bd == 0, f"n_dest={n_dest} not divisible by block_d={bd}"

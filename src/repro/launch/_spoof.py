@@ -1,0 +1,44 @@
+"""Spoof a multi-device CPU host — must run before jax initializes.
+
+Shared by the serving entry points (``launch/serve_snn.py``,
+``benchmarks/serving_bench.py``): they call :func:`spoof_devices_from_argv`
+at module top, before their first jax import.  This module must therefore
+never import jax itself.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def spoof_devices_from_argv(argv: list[str] | None = None) -> int | None:
+    """Scan argv for ``--spoof-devices N`` / ``--spoof-devices=N`` and set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.  Returns the
+    requested count (None if the flag is absent) so callers can assert the
+    device count actually took effect after jax initializes."""
+    argv = sys.argv if argv is None else argv
+    n: int | None = None
+    for i, arg in enumerate(argv):
+        if arg == "--spoof-devices":
+            if i + 1 >= len(argv):
+                raise SystemExit("--spoof-devices requires a device count")
+            n = int(argv[i + 1])
+        elif arg.startswith("--spoof-devices="):
+            n = int(arg.split("=", 1)[1])
+    if n is not None:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}")
+    return n
+
+
+def assert_spoof_applied(requested: int | None) -> None:
+    """Call after jax init: fail loudly if the spoof did not take effect
+    (e.g. jax was already initialized by an earlier import)."""
+    if requested is None:
+        return
+    import jax
+    assert len(jax.devices()) >= requested, \
+        f"requested {requested} spoofed devices but jax sees " \
+        f"{len(jax.devices())} — was jax imported before the spoof?"

@@ -1,0 +1,151 @@
+"""MENAGE serving launcher: continuous batching of DVS event streams over a
+data-parallel host mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve_snn --model both --requests 48 \
+      [--data 2] [--spoof-devices 2] [--smoke]
+
+Requests are variable-length spike trains; the front end
+(:mod:`repro.engine.serving`) pads them into the policy's fixed ``(B, T)``
+bucket grid (bounded jit cache, verified via ``trace_count``) and
+:func:`repro.engine.sharded_run.run_sharded` fans each bucket batch out over
+the mesh — batch axis sharded, control memories replicated, input buffers
+donated between steps on accelerator backends.
+
+``--spoof-devices N`` emulates an N-device host on CPU (sets
+``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax initializes;
+must be the launcher that imports jax first, hence the sys.argv peek below).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.launch._spoof import (assert_spoof_applied,
+                                 spoof_devices_from_argv)
+
+_SPOOFED = spoof_devices_from_argv()  # before any jax import in this process
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.accelerator import MappedModel, map_model  # noqa: E402
+from repro.core.energy import AcceleratorSpec  # noqa: E402
+from repro.core.layers import Conv2d, Dense, SumPool2d  # noqa: E402
+from repro.core.lif import LIFParams  # noqa: E402
+from repro.engine import (BucketPolicy, run_bucketed,  # noqa: E402
+                          trace_count)
+from repro.engine.sharded_run import snn_serve_mesh  # noqa: E402
+
+
+def build_demo_model(kind: str, *, smoke: bool = False,
+                     seed: int = 0) -> MappedModel:
+    """A servable mapped model with random pruned weights (training is not
+    the point of the serving path; spike statistics are).  ``mlp`` mirrors
+    the paper's N-MNIST-style stack, ``conv`` the conv/pool/dense lowering."""
+    rng = np.random.default_rng(seed)
+    spec = AcceleratorSpec("serve-demo", n_cores=4, n_engines=8, n_caps=16,
+                           weight_mem_bytes=1 << 20)
+    lif = LIFParams(beta=0.85, threshold=0.6)
+    if kind == "mlp":
+        sizes = (64, 48, 10) if smoke else (256, 128, 64, 10)
+        ws = []
+        for i in range(len(sizes) - 1):
+            w = rng.normal(0, 0.4, (sizes[i], sizes[i + 1])).astype(np.float32)
+            w[np.abs(w) < np.quantile(np.abs(w), 0.6)] = 0
+            ws.append(w)
+        return map_model(ws, spec, lif=lif)
+    if kind == "conv":
+        c, side = (2, 6) if smoke else (2, 10)
+        k = rng.normal(0, 0.6, (4, c, 3, 3)).astype(np.float32)
+        k[rng.random(k.shape) > 0.6] = 0
+        conv = Conv2d(kernel=k, in_shape=(c, side, side), stride=1, padding=1)
+        pool = SumPool2d(conv.out_shape, 2)
+        head = rng.normal(0, 0.4, (int(np.prod(pool.out_shape)), 10)) \
+            .astype(np.float32)
+        head[np.abs(head) < np.quantile(np.abs(head), 0.4)] = 0
+        return map_model([conv, pool, Dense(w=head)], spec, lif=lif)
+    raise ValueError(f"unknown model kind {kind!r} (mlp|conv)")
+
+
+def synth_requests(n: int, n_in: int, *, t_lo: int = 4, t_hi: int = 30,
+                   rate: float = 0.15, seed: int = 0) -> list[np.ndarray]:
+    """A stream of n variable-length DVS-style requests ``[T_i, n_in]``."""
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(t_lo, t_hi + 1, size=n)
+    return [(rng.random((int(t), n_in)) < rate).astype(np.float32)
+            for t in lengths]
+
+
+def serve_stream(model, streams, *, policy: BucketPolicy, mesh,
+                 max_events: int | None = None, with_stats: bool = False):
+    """One serving pass; returns (results, metrics).  Metrics are the
+    serving-trajectory numbers BENCH_serving.json records: events/s,
+    spikes/s, p50/p99 per-bucket step latency, and the jit-trace count."""
+    telemetry: list[dict] = []
+    n0 = trace_count()
+    t0 = time.perf_counter()
+    results = run_bucketed(model, streams, policy=policy, mesh=mesh,
+                           max_events=max_events, with_stats=with_stats,
+                           telemetry=telemetry)
+    wall = time.perf_counter() - t0
+    lat_ms = np.asarray([t["seconds"] for t in telemetry]) * 1e3
+    events = sum(t["events"] for t in telemetry)
+    spikes = sum(t["out_spikes"] for t in telemetry)
+    metrics = {
+        "requests": len(streams),
+        "engine_steps": len(telemetry),
+        "wall_s": wall,
+        "events_per_s": events / max(wall, 1e-9),
+        "spikes_per_s": spikes / max(wall, 1e-9),
+        "p50_step_ms": float(np.percentile(lat_ms, 50)) if len(lat_ms) else 0.0,
+        "p99_step_ms": float(np.percentile(lat_ms, 99)) if len(lat_ms) else 0.0,
+        "new_traces": trace_count() - n0,
+        "n_buckets": policy.n_buckets,
+    }
+    return results, metrics
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="mlp", choices=["mlp", "conv", "both"])
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--data", type=int, default=None,
+                    help="mesh data-axis extent (default: all devices)")
+    ap.add_argument("--spoof-devices", type=int, default=None,
+                    help="emulate N CPU devices (set before jax init)")
+    ap.add_argument("--max-events", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    assert_spoof_applied(_SPOOFED)
+
+    mesh = snn_serve_mesh(args.data)
+    n_shards = mesh.size
+    kinds = ["mlp", "conv"] if args.model == "both" else [args.model]
+    n_req = min(args.requests, 16) if args.smoke else args.requests
+    for kind in kinds:
+        model = build_demo_model(kind, smoke=args.smoke)
+        packed = model.pack()
+        streams = synth_requests(n_req, packed.n_in,
+                                 t_hi=12 if args.smoke else 30, seed=1)
+        policy = BucketPolicy.covering([s.shape[0] for s in streams],
+                                       n_shards=n_shards,
+                                       max_batch=4 * n_shards)
+        # warm every bucket this stream touches, then measure a hot pass
+        serve_stream(packed, streams, policy=policy, mesh=mesh,
+                     max_events=args.max_events)
+        results, m = serve_stream(packed, streams, policy=policy, mesh=mesh,
+                                  max_events=args.max_events)
+        assert m["new_traces"] == 0, "hot serving pass retraced the jit!"
+        preds = [int(r.out_spikes.sum(axis=0).argmax()) for r in results[:8]]
+        print(f"serve/{kind}: {m['requests']} reqs over {n_shards}-way mesh "
+              f"in {m['wall_s']*1e3:.0f} ms | "
+              f"{m['events_per_s']/1e3:.1f}k events/s, "
+              f"{m['spikes_per_s']/1e3:.1f}k spikes/s | "
+              f"step p50 {m['p50_step_ms']:.1f} ms p99 "
+              f"{m['p99_step_ms']:.1f} ms | "
+              f"buckets<= {m['n_buckets']} | sample preds {preds}")
+
+
+if __name__ == "__main__":
+    main()

@@ -57,6 +57,19 @@ DECODE_RULES_SP: AxisMap = {**TRAIN_RULES,
                             "cache_seq": "model", "cache_kv_heads": None,
                             "act_kv_heads": None}
 
+# MENAGE event-stream serving (engine/sharded_run.py): pure data parallelism.
+# The batch of spike trains shards over the host mesh's data axes; the time
+# axis stays local (the LIF scan is causal/stateful) and the neuron axis stays
+# local (the control-memory pytree — MEM_E2A / MEM_S&N / A-SYN — is replicated
+# on every device, exactly like the silicon replicates a full MX-NEURACORE
+# chain per die).  The same divisibility fallback applies: a batch that the
+# mesh can't split serves replicated instead of crashing.
+SNN_SERVE_RULES: AxisMap = {
+    "event_batch": ("pod", "data"),
+    "event_time": None,
+    "neuron": None,
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:

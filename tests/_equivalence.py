@@ -45,3 +45,28 @@ def assert_oracle_engine_equivalent(model, spikes: np.ndarray,
                 res.overflow[li][b], oracle.overflow[li],
                 err_msg=f"{ctx} layer {li} overflow")
     return res
+
+
+def assert_engine_results_equal(a, b, tag: str = ""):
+    """Bit-exact equality of two :class:`BatchedRunResult` surfaces — the
+    sharded-vs-single-device contract (``run_sharded == run_batched``), plus
+    per-sample EnergyReport agreement when both carry an AcceleratorSpec."""
+    np.testing.assert_array_equal(a.out_spikes, b.out_spikes,
+                                  err_msg=f"{tag} spikes")
+    assert len(a.per_layer_stats) == len(b.per_layer_stats), tag
+    for li, (sa, sb) in enumerate(zip(a.per_layer_stats, b.per_layer_stats)):
+        for f in STAT_FIELDS:
+            np.testing.assert_array_equal(getattr(sa, f), getattr(sb, f),
+                                          err_msg=f"{tag} layer {li} {f}")
+        np.testing.assert_array_equal(sa.mem_e_peak, sb.mem_e_peak,
+                                      err_msg=f"{tag} layer {li} mem_e_peak")
+    for li in range(len(a.per_layer_util)):
+        np.testing.assert_array_equal(a.per_layer_util[li],
+                                      b.per_layer_util[li],
+                                      err_msg=f"{tag} layer {li} util")
+        np.testing.assert_array_equal(a.overflow[li], b.overflow[li],
+                                      err_msg=f"{tag} layer {li} overflow")
+    if a.spec is not None and a.per_layer_stats:
+        for s in range(a.out_spikes.shape[0]):
+            ea, eb = a.sample_energy(s), b.sample_energy(s)
+            assert ea == eb, f"{tag} sample {s} energy: {ea} != {eb}"

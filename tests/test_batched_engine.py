@@ -179,6 +179,50 @@ def test_jit_cache_stability(rng):
     assert br.trace_count() == n + 1
 
 
+def test_empty_batch(rng):
+    """B=0 returns an empty result instead of crashing (regression: the
+    Pallas call used to die slicing a (1, E) block out of (0, E) events)."""
+    ws = _pruned_mlp(rng, (16, 12, 8))
+    model = map_model(ws, SPEC)
+    res = br.run_batched(model, np.zeros((0, 5, 16), np.float32))
+    assert res.out_spikes.shape == (0, 5, 8) and res.batch == 0
+    for li, s in enumerate(res.per_layer_stats):
+        assert s.cycles.shape == (0, 5) and s.mem_e_peak.shape == (0,)
+        assert res.per_layer_util[li].shape == (0, 5)
+        assert res.overflow[li].shape == (0, 5)
+    # and with a finite MEM_E cap / without stats
+    assert br.run_batched(model, np.zeros((0, 5, 16), np.float32),
+                          max_events=2).out_spikes.shape == (0, 5, 8)
+    assert br.run_batched(model, np.zeros((0, 5, 16), np.float32),
+                          with_stats=False).per_layer_stats == []
+
+
+def test_single_timestep(rng):
+    """T=1: the LIF scan degenerates to one step; full oracle equivalence
+    (spikes, stats, util, overflow) must hold."""
+    from _equivalence import assert_oracle_engine_equivalent
+    ws = _pruned_mlp(rng, (14, 10, 6), density=0.7)
+    model = map_model(ws, SPEC, lif=LIFParams(beta=0.8, threshold=0.7))
+    spikes = (rng.random((3, 1, 14)) < 0.5).astype(np.float32)
+    for depth in (None, 2):
+        assert_oracle_engine_equivalent(model, spikes, max_events=depth,
+                                        tag=f"T=1 depth={depth}")
+
+
+def test_all_silent_input(rng):
+    """No events anywhere: silent output, all-zero stats, zero MEM_E peak —
+    and still bit-exact against the oracle walking the same silence."""
+    from _equivalence import assert_oracle_engine_equivalent
+    ws = _pruned_mlp(rng, (16, 12, 8))
+    model = map_model(ws, SPEC)
+    spikes = np.zeros((2, 6, 16), np.float32)
+    res = assert_oracle_engine_equivalent(model, spikes, tag="silent")
+    assert res.out_spikes.sum() == 0
+    for s in res.per_layer_stats:
+        assert s.cycles.sum() == 0 and s.engine_ops.sum() == 0
+        assert (s.mem_e_peak == 0).all()
+
+
 def test_with_stats_false_skips_accounting(rng):
     ws = _pruned_mlp(rng, (16, 8))
     model = map_model(ws, SPEC)

@@ -1,0 +1,191 @@
+"""run_sharded == run_batched, bit for bit, on host meshes.
+
+The contract (engine/sharded_run.py): sharding the batch axis over a data
+mesh — control memories replicated, spikes split — must not change a single
+bit of the result surface: output spikes, every DispatchStats field,
+utilization, overflow, and per-sample EnergyReport.  Since ``run_batched``
+is itself proven equal to the numpy oracle, this extends the PR 2
+equivalence contract to the mesh.
+
+In-process tests run on whatever devices exist (a 1-device mesh still goes
+through the full shard_map path); subprocess tests spoof a multi-device CPU
+host, covering the >=2-device acceptance criterion for dense and conv
+models.  CI additionally re-runs this module under a spoofed 8-device host.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from _equivalence import (assert_engine_results_equal,
+                          assert_oracle_engine_equivalent)
+from _hypothesis_compat import given, settings, st
+from test_equivalence_prop import build_case, dense_cases, conv_cases
+
+from repro.engine import batched_run as br
+from repro.engine import run_sharded
+from repro.engine.sharded_run import (batch_spec, n_batch_shards,
+                                      snn_serve_mesh)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str, devices: int = 8) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    pre = (f'import os; os.environ["XLA_FLAGS"] = '
+           f'"--xla_force_host_platform_device_count={devices}"\n')
+    p = subprocess.run([sys.executable, "-c", pre + script],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=600)
+    assert p.returncode == 0, (p.stdout[-2000:], p.stderr[-4000:])
+    return p.stdout
+
+
+# ------------------------------------------------- in-process (any devices)
+
+DENSE_CASE = {"seed": 3, "in_shape": [14, 1, 1],
+              "layers": [{"kind": "dense", "n_out": 12, "density": 0.6},
+                         {"kind": "dense", "n_out": 6, "density": 0.8}],
+              "batch": 4, "t": 6, "p_spike": 0.35, "max_events": None,
+              "n_engines": 3, "n_caps": 5, "beta": 0.8, "threshold": 0.7}
+
+CONV_CASE = {"seed": 5, "in_shape": [2, 6, 6],
+             "layers": [{"kind": "conv", "c_out": 2, "k": 3, "stride": 1,
+                         "padding": 1, "density": 0.6},
+                        {"kind": "pool", "pool": 2},
+                        {"kind": "dense", "n_out": 5, "density": 0.7}],
+             "batch": 4, "t": 5, "p_spike": 0.25, "max_events": None,
+             "n_engines": 3, "n_caps": 6, "beta": 0.8, "threshold": 0.7}
+
+
+@pytest.mark.parametrize("case,cap", [
+    (DENSE_CASE, None), (DENSE_CASE, 3), (CONV_CASE, None), (CONV_CASE, 4)])
+def test_sharded_matches_batched(case, cap):
+    model, spikes = build_case(case)
+    mesh = snn_serve_mesh()
+    a = run_sharded(model, spikes, mesh=mesh, max_events=cap)
+    b = br.run_batched(model, spikes, max_events=cap)
+    assert_engine_results_equal(a, b, tag=f"cap={cap}")
+
+
+def test_sharded_matches_oracle_transitively():
+    """The chain closes: sharded == batched == numpy oracle."""
+    model, spikes = build_case(DENSE_CASE)
+    assert_oracle_engine_equivalent(model, spikes)
+    assert_engine_results_equal(run_sharded(model, spikes),
+                                br.run_batched(model, spikes))
+
+
+def test_sharded_empty_batch():
+    model, spikes = build_case(DENSE_CASE)
+    res = run_sharded(model, spikes[:0])
+    assert res.out_spikes.shape == (0, spikes.shape[1], model.layers[-1].n_dest)
+    assert all(s.cycles.shape[0] == 0 for s in res.per_layer_stats)
+
+
+def test_batch_spec_rules():
+    """The SNN serving rules shard only the batch axis, and drop the mapping
+    (replicate) when the batch is not divisible by the mesh."""
+    mesh = snn_serve_mesh()
+    n = mesh.shape["data"]
+    spec = batch_spec(mesh, (4 * n, 7, 13))
+    assert spec[1] is None and spec[2] is None
+    assert n_batch_shards(mesh, 4 * n) == n
+    if n > 1:
+        assert spec[0] == "data"
+        assert n_batch_shards(mesh, 4 * n + 1) == 1   # graceful degradation
+    else:
+        assert n_batch_shards(mesh, 5) == 1
+
+
+def test_sharded_trace_count_shared_probe():
+    """run_sharded bumps the same trace_count() probe as run_batched, and a
+    repeated shape does not retrace."""
+    model, spikes = build_case(DENSE_CASE)
+    mesh = snn_serve_mesh()
+    run_sharded(model, spikes, mesh=mesh)
+    n = br.trace_count()
+    run_sharded(model, spikes, mesh=mesh)
+    assert br.trace_count() == n
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=dense_cases())
+def test_prop_sharded_dense(case):
+    """Property: run_sharded on a 1xN host mesh == run_batched (spikes,
+    DispatchStats, EnergyReport) for random dense stacks."""
+    model, spikes = build_case(case)
+    a = run_sharded(model, spikes, mesh=snn_serve_mesh(),
+                    max_events=case.get("max_events"))
+    b = br.run_batched(model, spikes, max_events=case.get("max_events"))
+    assert_engine_results_equal(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=conv_cases())
+def test_prop_sharded_conv(case):
+    """Property: sharded == batched for random conv/pool/dense stacks."""
+    model, spikes = build_case(case)
+    a = run_sharded(model, spikes, mesh=snn_serve_mesh(),
+                    max_events=case.get("max_events"))
+    b = br.run_batched(model, spikes, max_events=case.get("max_events"))
+    assert_engine_results_equal(a, b)
+
+
+# ------------------------------------------- spoofed multi-device acceptance
+
+def test_sharded_8dev_bit_exact():
+    """Dense + conv + capped models on a spoofed 8-device host mesh: the
+    batch really splits 8 ways and every surface stays bit-exact."""
+    out = _run("""
+import numpy as np
+import sys
+sys.path.insert(0, "tests")
+from _equivalence import assert_engine_results_equal
+from test_equivalence_prop import build_case
+from test_sharded_engine import DENSE_CASE, CONV_CASE
+from repro.engine import batched_run as br
+from repro.engine import run_sharded
+from repro.engine.sharded_run import n_batch_shards, snn_serve_mesh
+
+mesh = snn_serve_mesh()
+assert mesh.size == 8, mesh
+for case, cap in [(DENSE_CASE, None), (DENSE_CASE, 2),
+                  (CONV_CASE, None), (CONV_CASE, 3)]:
+    case = dict(case, batch=8)
+    model, spikes = build_case(case)
+    assert n_batch_shards(mesh, spikes.shape[0]) == 8
+    a = run_sharded(model, spikes, mesh=mesh, max_events=cap)
+    b = br.run_batched(model, spikes, max_events=cap)
+    assert_engine_results_equal(a, b, tag=f"8dev cap={cap}")
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_sharded_8dev_nondivisible_graceful():
+    """B=6 on an 8-device mesh can't split: the rule machinery degrades to
+    replicated execution and the result is still bit-exact."""
+    out = _run("""
+import numpy as np
+import sys
+sys.path.insert(0, "tests")
+from _equivalence import assert_engine_results_equal
+from test_equivalence_prop import build_case
+from test_sharded_engine import DENSE_CASE
+from repro.engine import batched_run as br
+from repro.engine import run_sharded
+from repro.engine.sharded_run import n_batch_shards, snn_serve_mesh
+
+mesh = snn_serve_mesh()
+case = dict(DENSE_CASE, batch=6)
+model, spikes = build_case(case)
+assert n_batch_shards(mesh, 6) == 1
+assert_engine_results_equal(run_sharded(model, spikes, mesh=mesh),
+                            br.run_batched(model, spikes))
+print("OK")
+""")
+    assert "OK" in out
