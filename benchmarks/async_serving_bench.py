@@ -1,0 +1,158 @@
+"""Latency-vs-throughput benchmark for the always-on async serving loop.
+
+Replays Poisson and bursty arrival traces at a sweep of offered loads
+through :class:`repro.engine.stream_server.StreamServer` (virtual clock,
+service times calibrated from measured engine calls per bucket shape) and
+writes ``BENCH_async_serving.json``: throughput vs offered load, p50/p99
+end-to-end latency, deadline-miss rate, and bucket fill ratio — the async
+half of the serving perf trajectory CI records per PR, next to
+``BENCH_serving.json``.
+
+  PYTHONPATH=src python benchmarks/async_serving_bench.py [--smoke] \
+      [--out BENCH_async_serving.json] [--spoof-devices 2]
+
+Gates (CI fails loudly on regression):
+  * calibration warms every bucket; the serving passes must then run with
+    ZERO new jit traces (the hot-pass retrace gate);
+  * total traces stay <= the policy's bucket count;
+  * a spot request served through the async loop is bit-exact vs
+    single-device ``run_batched``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.launch._spoof import (assert_spoof_applied,
+                                 spoof_devices_from_argv)
+
+_SPOOFED = spoof_devices_from_argv()  # before any jax import in this process
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.engine import (BucketPolicy, run_batched, run_sharded,  # noqa: E402
+                          trace_count)
+from repro.engine.sharded_run import snn_serve_mesh  # noqa: E402
+from repro.launch.serve_snn import (build_demo_model, serve_async,  # noqa: E402
+                                    synth_arrival_trace)
+
+
+def calibrate_service(packed, policy: BucketPolicy, mesh) -> dict:
+    """Measure one engine call per bucket shape (warm first, then timed).
+    Doubles as the warm-up that makes the serving passes retrace-free, and
+    grounds the virtual-clock simulation in real measured seconds."""
+    timings = {}
+    for b in policy.batch_sizes:
+        for t in policy.time_steps:
+            zeros = np.zeros((b, t, packed.n_in), dtype=np.float32)
+            for _ in range(2):     # first call compiles; second measures
+                t0 = time.perf_counter()
+                if mesh is None:
+                    run_batched(packed, zeros, with_stats=False)
+                else:
+                    run_sharded(packed, zeros, mesh=mesh, with_stats=False)
+                dt = time.perf_counter() - t0
+            timings[(b, t)] = dt
+    return timings
+
+
+def bench_model(kind: str, *, smoke: bool, mesh, seed: int = 0) -> dict:
+    model = build_demo_model(kind, smoke=smoke, seed=seed)
+    packed = model.pack()
+    n_req = 24 if smoke else 96
+    t_hi = 12 if smoke else 30
+    base_rate = 100.0
+    probe = synth_arrival_trace(n_req, packed.n_in, t_hi=t_hi,
+                                rate=base_rate, seed=seed + 1)
+    policy = BucketPolicy.covering([s.shape[0] for _, s, _ in probe],
+                                   n_shards=mesh.size,
+                                   max_batch=4 * mesh.size)
+    n_cold = trace_count()
+    timings = calibrate_service(packed, policy, mesh)
+    max_service = max(timings.values())
+    service_model = lambda b, t: timings[(b, t)]  # noqa: E731
+    n0 = trace_count()
+    sweep = []
+    loads = (0.5, 2.0) if smoke else (0.25, 1.0, 4.0)
+    for mode in ("poisson", "bursty"):
+        for load in loads:
+            rate = base_rate * load
+            # deadline slack scales with the slowest bucket call so the
+            # low-load points are comfortably servable; high load is where
+            # the latency/miss tradeoff shows up in the curve
+            slack = 8.0 * max_service
+            trace = synth_arrival_trace(n_req, packed.n_in, mode=mode,
+                                        rate=rate, slack=slack, t_hi=t_hi,
+                                        seed=seed + 1)
+            _, rids, m = serve_async(packed, trace, policy=policy, mesh=mesh,
+                                     service_model=service_model)
+            sweep.append({
+                "mode": mode, "offered_rps": m["offered_rps"],
+                "throughput_rps": m["throughput_rps"],
+                "completed": m["completed"], "requests": m["requests"],
+                "p50_latency_ms": m["p50_latency_s"] * 1e3,
+                "p99_latency_ms": m["p99_latency_s"] * 1e3,
+                "p50_ttfd_ms": m["p50_ttfd_s"] * 1e3,
+                "deadline_miss_rate": m["deadline_miss_rate"],
+                "bucket_fill_ratio": m["bucket_fill_ratio"],
+                "forced_dispatches": m["forced_dispatches"],
+                "dispatches": m["dispatches"],
+                "max_queue_depth": m["max_queue_depth"],
+                "rejected": m["rejected"], "shed": m["shed"]})
+            print(f"async/{kind}/{mode}@{rate:.0f}rps: served "
+                  f"{m['throughput_rps']:.0f} rps, p50 "
+                  f"{m['p50_latency_s']*1e3:.1f} ms, p99 "
+                  f"{m['p99_latency_s']*1e3:.1f} ms, miss "
+                  f"{m['deadline_miss_rate']:.3f}, fill "
+                  f"{m['bucket_fill_ratio']:.2f}, forced "
+                  f"{m['forced_dispatches']}/{m['dispatches']}")
+    hot_traces = trace_count() - n0
+    assert hot_traces == 0, \
+        f"{kind}: async serving retraced {hot_traces}x after calibration " \
+        f"warmed every bucket — the jit cache is churning"
+    # total including calibration: one trace per bucket shape, nothing more
+    # (checked before the spot check below adds its off-grid [1, T] shape)
+    traces_total = trace_count() - n_cold
+    assert traces_total <= policy.n_buckets, \
+        f"{kind}: {traces_total} traces > {policy.n_buckets} buckets"
+    # bit-exactness spot check: the longest request in the last trace,
+    # served alone on the single-device engine
+    results, rids, _ = serve_async(packed, trace, policy=policy, mesh=mesh,
+                                   service_model=service_model)
+    i = int(np.argmax([s.shape[0] for _, s, _ in trace]))
+    assert rids[i] is not None and rids[i] in results
+    alone = run_batched(packed, trace[i][1][None], with_stats=False)
+    assert np.array_equal(results[rids[i]].out_spikes, alone.out_spikes[0]), \
+        f"{kind}: async serving != run_batched on request {i}"
+    return {"model": kind, "n_shards": mesh.size,
+            "calibration_ms": {f"{b}x{t}": dt * 1e3
+                               for (b, t), dt in timings.items()},
+            "n_buckets": policy.n_buckets, "traces_hot": hot_traces,
+            "traces_total": traces_total, "sweep": sweep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="BENCH_async_serving.json")
+    ap.add_argument("--data", type=int, default=None)
+    ap.add_argument("--spoof-devices", type=int, default=None)
+    args = ap.parse_args()
+    assert_spoof_applied(_SPOOFED)
+    mesh = snn_serve_mesh(args.data)
+    rows = [bench_model(kind, smoke=args.smoke, mesh=mesh)
+            for kind in ("mlp", "conv")]
+    blob = {"bench": "async_serving", "smoke": args.smoke,
+            "backend": jax.default_backend(),
+            "n_devices": len(jax.devices()), "models": rows}
+    with open(args.out, "w") as f:
+        json.dump(blob, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.energy import AcceleratorSpec, EnergyReport, energy_model
+from repro.core.energy import (FRAME_CYCLES, AcceleratorSpec, EnergyReport,
+                               energy_model)
 from repro.core.layers import Conv2d, Dense, LayerSpec, as_layer_spec
 from repro.core.lif import LIFParams
 from repro.core.mapping import MappingProblem, MappingSolution, solve_mapping
@@ -192,11 +193,15 @@ def lif_rollout_np(currents: np.ndarray, p: LIFParams) -> np.ndarray:
 
 def run(model: MappedModel, in_spikes: np.ndarray,
         sn_capacity_rows: int | None = None,
-        frame_cycles: int | None = "default",
+        frame_cycles: int | None = FRAME_CYCLES,
         max_events: int | None = None) -> RunResult:
     """Execute a spike train [T, n_in] through the MX-NEURACORE chain.
     Rounds within a layer execute sequentially (their cycles add); their
     currents target disjoint neuron subsets.
+
+    ``frame_cycles`` has :func:`repro.core.energy.energy_model`'s signature:
+    it defaults to the calibrated sensor frame period and ``None`` selects
+    throughput mode (no idle between frames).
 
     ``max_events`` caps the per-step MEM_E FIFO depth on every core:
     excess events are dropped lowest-priority-last (ascending source index
@@ -231,14 +236,25 @@ def run(model: MappedModel, in_spikes: np.ndarray,
         util_all.append(util)
         stats_all.append(agg_stats)
         spikes = out
-    if frame_cycles == "default":
-        energy = energy_model(model.spec, stats_all)
-    else:
-        energy = energy_model(model.spec, stats_all,
-                              frame_cycles=frame_cycles)
+    energy = energy_model(model.spec, stats_all, frame_cycles=frame_cycles)
     return RunResult(out_spikes=spikes, per_layer_stats=stats_all,
                      per_layer_util=util_all, energy=energy,
                      overflow=drop_all)
+
+
+def run_batch(model: MappedModel, in_spikes: np.ndarray,
+              sn_capacity_rows: int | None = None,
+              frame_cycles: int | None = FRAME_CYCLES,
+              max_events: int | None = None) -> list[RunResult]:
+    """Batched oracle: :func:`run` over ``in_spikes[B, T, n_in]``, one
+    :class:`RunResult` per sample.  Still the per-sample cycle-accurate
+    Python walk — this is the reference the equivalence suites compare the
+    batched engine against, not a fast path."""
+    spikes = np.asarray(in_spikes, dtype=np.float32)
+    assert spikes.ndim == 3, f"expected [B, T, n_in], got {spikes.shape}"
+    return [run(model, spikes[b], sn_capacity_rows=sn_capacity_rows,
+                frame_cycles=frame_cycles, max_events=max_events)
+            for b in range(spikes.shape[0])]
 
 
 def reference_forward(weights: "list[np.ndarray | LayerSpec]", lif: LIFParams,

@@ -1,7 +1,11 @@
 from repro.engine.batched_run import (BatchedDispatchStats, BatchedRunResult,  # noqa: F401
                                       PackedLayer, PackedModel, PackedRound,
                                       pack_model, run_batched, trace_count)
-from repro.engine.serving import (BucketPolicy, RequestResult,  # noqa: F401
-                                  plan_batches, run_bucketed)
+from repro.engine.serving import (BucketPolicy, OverlongRequestError,  # noqa: F401
+                                  RequestResult, TELEMETRY_KEYS,
+                                  execute_plan, plan_batches, run_bucketed)
 from repro.engine.sharded_run import run_sharded, snn_serve_mesh  # noqa: F401
+from repro.engine.stream_server import (METRIC_KEYS, Rejection,  # noqa: F401
+                                        Request, ServerMetrics, StreamServer,
+                                        VirtualClock, WallClock, serve_trace)
 from repro.engine.train_loop import TrainLoopConfig, TrainState, make_train_step, train_loop  # noqa: F401

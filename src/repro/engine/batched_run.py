@@ -46,7 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.accelerator import MappedModel
-from repro.core.energy import AcceleratorSpec, EnergyReport, energy_model
+from repro.core.energy import (FRAME_CYCLES, AcceleratorSpec, EnergyReport,
+                               energy_model)
 from repro.core.lif import LIFParams, lif_rollout
 from repro.core.memories import DispatchStats, PackedTables
 from repro.kernels import ops
@@ -277,10 +278,11 @@ class BatchedRunResult:
         return [s.sample(b) for s in self.per_layer_stats]
 
     def sample_energy(self, b: int,
-                      frame_cycles: int | None = "default") -> EnergyReport:
+                      frame_cycles: int | None = FRAME_CYCLES) -> EnergyReport:
+        """Same signature as :func:`repro.core.energy.energy_model`:
+        ``frame_cycles`` defaults to the calibrated frame period, ``None``
+        means throughput mode."""
         assert self.spec is not None, "pack_model carried no AcceleratorSpec"
-        if frame_cycles == "default":
-            return energy_model(self.spec, self.sample_stats(b))
         return energy_model(self.spec, self.sample_stats(b),
                             frame_cycles=frame_cycles)
 

@@ -23,18 +23,37 @@ distinct shapes ever reach the engine, verified through the existing
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 
 import numpy as np
 
-from repro.core.energy import EnergyReport, energy_model
+from repro.core.energy import FRAME_CYCLES, EnergyReport, energy_model
 from repro.core.memories import DispatchStats
 from repro.engine import batched_run as br
 from repro.engine.sharded_run import run_sharded
 
+_log = logging.getLogger(__name__)
+
 
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+class OverlongRequestError(ValueError):
+    """Raised at admission when requests exceed the policy's largest time
+    bucket and auto-extension is off.  ``requests`` lists ``(index,
+    length)`` per offending request so callers can reject those requests
+    individually instead of failing the whole batch plan."""
+
+    def __init__(self, requests: list[tuple[int, int]], t_max: int):
+        self.requests = list(requests)
+        self.t_max = t_max
+        detail = ", ".join(f"request {i}: {t} steps" for i, t in self.requests)
+        super().__init__(
+            f"{len(self.requests)} request(s) exceed the largest time bucket "
+            f"({t_max}): {detail} — pass overlong='extend' to grow the grid, "
+            f"or reject these requests at admission")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +91,24 @@ class BucketPolicy:
             f"request of {t} steps exceeds the largest time bucket "
             f"{self.time_steps[-1]}; extend the policy "
             f"(BucketPolicy.covering picks buckets from observed lengths)")
+
+    def fits(self, t: int) -> bool:
+        """Whether a ``t``-step request lands in the grid at all — the
+        admission check that keeps :meth:`t_bucket` from failing mid-plan."""
+        return 0 < t <= self.time_steps[-1]
+
+    def with_time_bucket(self, t: int) -> "BucketPolicy":
+        """The policy extended to cover a ``t``-step request: the largest
+        bucket doubles until it covers ``t`` (geometric growth, so a stream
+        of ever-longer requests costs O(log T) new traces, not one each).
+        Returns ``self`` unchanged when ``t`` already fits."""
+        assert t > 0, f"cannot extend the grid to a {t}-step request"
+        if self.fits(t):
+            return self
+        tb = self.time_steps[-1]
+        while tb < t:
+            tb *= 2
+        return dataclasses.replace(self, time_steps=self.time_steps + (tb,))
 
     def b_bucket(self, b: int) -> int:
         assert 0 < b <= self.max_batch
@@ -152,11 +189,12 @@ class RequestResult:
     overflow: list[np.ndarray]                  # [T_i] per layer
     spec: object = None
 
-    def energy(self, frame_cycles: int | None = "default") -> EnergyReport:
+    def energy(self, frame_cycles: int | None = FRAME_CYCLES) -> EnergyReport:
+        """Same signature as :func:`repro.core.energy.energy_model`: the
+        frame period defaults to the calibrated ``FRAME_CYCLES`` constant,
+        ``None`` means throughput mode (no idle between frames)."""
         assert self.spec is not None and self.stats, \
             "energy needs with_stats=True and an AcceleratorSpec"
-        if frame_cycles == "default":
-            return energy_model(self.spec, self.stats)
         return energy_model(self.spec, self.stats, frame_cycles=frame_cycles)
 
 
@@ -182,11 +220,61 @@ def _slice_request(res: "br.BatchedRunResult", row: int, t: int,
         spec=res.spec)
 
 
+# The per-engine-call telemetry record schema, shared by ``run_bucketed``
+# and the async ``StreamServer`` (schema-locked in tests/test_serving.py so
+# dashboards reading BENCH_serving.json don't silently break).
+TELEMETRY_KEYS = ("b_pad", "t_pad", "n_requests", "events", "out_spikes",
+                  "seconds")
+
+
+def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
+                 mesh=None, max_events: int | None = None,
+                 sn_capacity_rows: int | None = None,
+                 with_stats: bool = True
+                 ) -> tuple[list[RequestResult], dict]:
+    """One engine call: zero-pad ``plan``'s requests into the plan's
+    ``(b_pad, t_pad)`` bucket, run (sharded when ``mesh`` is given), and
+    slice each request's bit-exact result back out.
+
+    The single execution path shared by the closed-list front end
+    (:func:`run_bucketed`) and the always-on async loop
+    (:mod:`repro.engine.stream_server`) — batch formation policy differs,
+    what happens to a formed batch cannot.  Returns the per-request results
+    (aligned with ``plan.indices``) and one ``TELEMETRY_KEYS`` record.
+    """
+    padded = np.zeros((plan.b_pad, plan.t_pad, packed.n_in),
+                      dtype=np.float32)
+    for row, i in enumerate(plan.indices):
+        padded[row, :streams[i].shape[0]] = streams[i]
+    t0 = time.perf_counter()
+    if mesh is None:
+        res = br.run_batched(packed, padded, max_events=max_events,
+                             sn_capacity_rows=sn_capacity_rows,
+                             with_stats=with_stats)
+    else:
+        res = run_sharded(packed, padded, mesh=mesh, max_events=max_events,
+                          sn_capacity_rows=sn_capacity_rows,
+                          with_stats=with_stats)
+    dt = time.perf_counter() - t0
+    record = {
+        "b_pad": plan.b_pad, "t_pad": plan.t_pad,
+        "n_requests": len(plan.indices),
+        "events": int(sum((streams[i] > 0).sum() for i in plan.indices)),
+        "out_spikes": int(sum(
+            res.out_spikes[row, :streams[i].shape[0]].sum()
+            for row, i in enumerate(plan.indices))),
+        "seconds": dt}
+    results = [_slice_request(res, row, streams[i].shape[0], with_stats)
+               for row, i in enumerate(plan.indices)]
+    return results, record
+
+
 def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
                  mesh=None, max_events: int | None = None,
                  sn_capacity_rows: int | None = None,
                  with_stats: bool = True,
-                 telemetry: list | None = None) -> list[RequestResult]:
+                 telemetry: list | None = None,
+                 overlong: str = "error") -> list[RequestResult]:
     """Serve a list of variable-length spike streams (``[T_i, n_in]`` each)
     through the bucketed engine; results come back in request order.
 
@@ -196,7 +284,14 @@ def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
     ``telemetry``, if a list, receives one dict per engine call (padded
     shape, request count, events served, wall seconds) — the hook
     ``benchmarks/serving_bench.py`` uses for p50/p99 step latencies.
+
+    ``overlong`` governs requests longer than the policy's largest time
+    bucket, checked at admission (before any engine work): ``"error"``
+    raises :class:`OverlongRequestError` naming every offending request;
+    ``"extend"`` grows the grid geometrically (new traces, logged) so the
+    rest of the batch is unaffected.
     """
+    assert overlong in ("error", "extend"), overlong
     packed = model if isinstance(model, br.PackedModel) else model.pack()
     streams = [np.asarray(s, dtype=np.float32) for s in streams]
     for i, s in enumerate(streams):
@@ -204,38 +299,29 @@ def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
             f"request {i}: expected [T, {packed.n_in}], got {s.shape}"
     if not streams:
         return []
+    lengths = [s.shape[0] for s in streams]
+    for i, t in enumerate(lengths):
+        assert t > 0, f"request {i} has a zero-length spike train"
     if policy is None:
         policy = BucketPolicy.covering(
-            [s.shape[0] for s in streams],
-            n_shards=mesh.size if mesh is not None else 1)
+            lengths, n_shards=mesh.size if mesh is not None else 1)
+    over = [(i, t) for i, t in enumerate(lengths) if not policy.fits(t)]
+    if over:
+        if overlong == "error":
+            raise OverlongRequestError(over, policy.time_steps[-1])
+        for _, t in over:
+            policy = policy.with_time_bucket(t)
+        _log.warning("run_bucketed: %d over-long request(s) extended the "
+                     "bucket grid to time_steps=%s (new jit traces)",
+                     len(over), policy.time_steps)
     results: list[RequestResult | None] = [None] * len(streams)
-    for plan in plan_batches([s.shape[0] for s in streams], policy):
-        padded = np.zeros((plan.b_pad, plan.t_pad, packed.n_in),
-                          dtype=np.float32)
-        for row, i in enumerate(plan.indices):
-            padded[row, :streams[i].shape[0]] = streams[i]
-        t0 = time.perf_counter()
-        if mesh is None:
-            res = br.run_batched(packed, padded, max_events=max_events,
-                                 sn_capacity_rows=sn_capacity_rows,
-                                 with_stats=with_stats)
-        else:
-            res = run_sharded(packed, padded, mesh=mesh,
-                              max_events=max_events,
-                              sn_capacity_rows=sn_capacity_rows,
-                              with_stats=with_stats)
-        dt = time.perf_counter() - t0
+    for plan in plan_batches(lengths, policy):
+        reqs, record = execute_plan(packed, streams, plan, mesh=mesh,
+                                    max_events=max_events,
+                                    sn_capacity_rows=sn_capacity_rows,
+                                    with_stats=with_stats)
         if telemetry is not None:
-            telemetry.append({
-                "b_pad": plan.b_pad, "t_pad": plan.t_pad,
-                "n_requests": len(plan.indices),
-                "events": int(sum((streams[i] > 0).sum()
-                                  for i in plan.indices)),
-                "out_spikes": int(sum(
-                    res.out_spikes[row, :streams[i].shape[0]].sum()
-                    for row, i in enumerate(plan.indices))),
-                "seconds": dt})
+            telemetry.append(record)
         for row, i in enumerate(plan.indices):
-            results[i] = _slice_request(res, row, streams[i].shape[0],
-                                        with_stats)
+            results[i] = reqs[row]
     return results  # type: ignore[return-value]

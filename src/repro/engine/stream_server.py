@@ -1,0 +1,475 @@
+"""Always-on async serving loop: arrival-driven continuous batching.
+
+``run_bucketed`` drains a *closed* list of requests; production DVS traffic
+from edge sensors is an open stream.  :class:`StreamServer` is the always-on
+front end for that stream:
+
+  * **Arrival queue with admission control.**  ``submit`` admits one request
+    at the current clock time.  The queue is bounded (``queue_capacity``);
+    an arrival that would overflow it is either rejected or sheds the oldest
+    pending request (``backpressure="reject" | "shed_oldest"``).  Requests
+    longer than the policy's largest time bucket are rejected at admission
+    with a per-request reason — or, with ``overlong="extend"``, grow the
+    bucket grid geometrically (new jit trace, logged) instead.
+  * **Deadline-aware batch formation.**  Pending requests group by time
+    bucket.  A group dispatches the moment it can fill a ``max_batch`` chunk
+    — or *earlier*, partially full, when the oldest member's deadline slack
+    (deadline − now − estimated service time − ``dispatch_margin``) runs
+    out.  This is the fix for the batch-formation stall of event-driven
+    dispatch (Yik et al. 2025): a short request never waits for a bucket
+    that might not fill.
+  * **Bit-exact execution.**  A formed batch runs through the *same*
+    :func:`repro.engine.serving.execute_plan` as the closed-list path —
+    zero-pad into the policy bucket, ``run_batched`` / ``run_sharded``,
+    slice each request back out — so every served result is bit-identical
+    to ``run_bucketed``'s and hence to the numpy oracle (tested,
+    ``tests/test_stream_server.py``).  The jit cache stays bounded by
+    ``policy.n_buckets`` by construction.
+  * **Metrics.**  :class:`ServerMetrics` tracks queue depth,
+    time-to-first-dispatch, end-to-end latency percentiles, deadline-miss
+    rate, and bucket fill ratio — the ``BENCH_async_serving.json`` surface.
+
+Time is pluggable: the default :class:`WallClock` serves real traffic;
+:class:`VirtualClock` + :func:`serve_trace` replay a time-stamped arrival
+trace deterministically (the clock only moves between arrivals and at
+deadline-trigger instants), which is what makes the scheduler's dispatch
+decisions unit-testable and the benchmark reproducible.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import logging
+import math
+import time
+
+import numpy as np
+
+from repro.engine import batched_run as br
+from repro.engine.serving import (BatchPlan, BucketPolicy, RequestResult,
+                                  execute_plan)
+
+_log = logging.getLogger(__name__)
+
+
+# ------------------------------------------------------------------- clocks
+
+class WallClock:
+    """Real time — the production configuration."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class VirtualClock:
+    """Manually-advanced time for deterministic replay of arrival traces."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0.0, f"time cannot run backwards (dt={dt})"
+        self._t += dt
+
+
+# ----------------------------------------------------------------- requests
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One admitted in-flight request."""
+
+    rid: int
+    stream: np.ndarray          # [T_i, n_in]
+    arrival_t: float
+    deadline: float             # absolute; math.inf = best-effort
+    t_pad: int                  # time bucket it was admitted into
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Why a request never produced a result: ``queue_full`` (bounded-queue
+    backpressure), ``shed`` (displaced by a newer arrival under
+    ``backpressure="shed_oldest"``), or ``overlong`` (admission control)."""
+
+    rid: int | None             # None when rejected before admission
+    reason: str
+    detail: str
+    at: float
+
+
+# ------------------------------------------------------------------ metrics
+
+# Always-on means unbounded time: per-request samples (latency, TTFD, fill)
+# and the telemetry/rejection logs keep the most recent WINDOW entries, so a
+# long-lived server reports sliding-window percentiles at O(1) memory
+# instead of growing until OOM.  Counters are exact over the full lifetime.
+METRICS_WINDOW = 10_000
+
+# The ServerMetrics.snapshot() schema, locked by tests/test_serving.py so
+# dashboards reading BENCH_async_serving.json don't silently break.
+METRIC_KEYS = (
+    "submitted", "admitted", "rejected", "shed", "completed",
+    "deadline_misses", "deadline_miss_rate", "dispatches",
+    "forced_dispatches", "policy_extensions", "queue_depth",
+    "max_queue_depth", "bucket_fill_ratio", "p50_ttfd_s", "p99_ttfd_s",
+    "p50_latency_s", "p99_latency_s")
+
+
+@dataclasses.dataclass
+class ServerMetrics:
+    """Serving-loop counters plus per-request latency samples.
+
+    ``snapshot()`` reduces to the fixed ``METRIC_KEYS`` dict: queue depth
+    (current/max), time-to-first-dispatch and end-to-end latency
+    percentiles, deadline-miss rate over completed requests, and the mean
+    bucket fill ratio (requests per dispatch / padded batch rows — how much
+    of each engine call was real work).  Counters are lifetime-exact;
+    percentiles/fill are over the last ``METRICS_WINDOW`` samples."""
+
+    submitted: int = 0
+    admitted: int = 0
+    rejected: int = 0
+    shed: int = 0
+    completed: int = 0
+    deadline_misses: int = 0
+    dispatches: int = 0
+    forced_dispatches: int = 0      # deadline-triggered partial dispatches
+    policy_extensions: int = 0
+    queue_depth: int = 0
+    max_queue_depth: int = 0
+    ttfd_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=METRICS_WINDOW))
+    latency_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=METRICS_WINDOW))
+    fill: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=METRICS_WINDOW))
+
+    @staticmethod
+    def _pct(xs, q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "completed": self.completed,
+            "deadline_misses": self.deadline_misses,
+            "deadline_miss_rate": (self.deadline_misses / self.completed
+                                   if self.completed else 0.0),
+            "dispatches": self.dispatches,
+            "forced_dispatches": self.forced_dispatches,
+            "policy_extensions": self.policy_extensions,
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "bucket_fill_ratio": (float(np.mean(self.fill))
+                                  if self.fill else 0.0),
+            "p50_ttfd_s": self._pct(self.ttfd_s, 50),
+            "p99_ttfd_s": self._pct(self.ttfd_s, 99),
+            "p50_latency_s": self._pct(self.latency_s, 50),
+            "p99_latency_s": self._pct(self.latency_s, 99),
+        }
+
+
+# ------------------------------------------------------------------- server
+
+_EWMA_ALPHA = 0.3
+
+
+class StreamServer:
+    """The always-on continuous-batching loop (module docstring has the
+    design).  Drive it with :meth:`submit` on arrival, :meth:`poll` when
+    time passes (:meth:`next_deadline` says when that matters), and
+    :meth:`flush` at shutdown; completed ``(rid, RequestResult)`` pairs
+    come back from ``poll``/``flush``.
+    """
+
+    def __init__(self, model, *, policy: BucketPolicy,
+                 mesh=None, clock=None,
+                 queue_capacity: int = 256,
+                 backpressure: str = "reject",
+                 overlong: str = "reject",
+                 default_slack: float = math.inf,
+                 dispatch_margin: float = 0.0,
+                 service_model=None,
+                 max_events: int | None = None,
+                 sn_capacity_rows: int | None = None,
+                 with_stats: bool = False):
+        assert backpressure in ("reject", "shed_oldest"), backpressure
+        assert overlong in ("reject", "extend"), overlong
+        assert queue_capacity > 0
+        self.packed = (model if isinstance(model, br.PackedModel)
+                       else model.pack())
+        self.policy = policy
+        self.mesh = mesh
+        self.clock = clock if clock is not None else WallClock()
+        self.queue_capacity = queue_capacity
+        self.backpressure = backpressure
+        self.overlong = overlong
+        self.default_slack = default_slack
+        self.dispatch_margin = dispatch_margin
+        # service_model(b_pad, t_pad) -> seconds: the scheduler's estimate of
+        # one engine call on that bucket.  None = learn an EWMA from measured
+        # wall seconds.  On a VirtualClock the model also *advances* the
+        # clock per dispatch, turning the server into a deterministic
+        # discrete-event simulation grounded in calibrated timings.
+        self.service_model = service_model
+        self.max_events = max_events
+        self.sn_capacity_rows = sn_capacity_rows
+        self.with_stats = with_stats
+        self.metrics = ServerMetrics()
+        # execute_plan records / rejection log, last METRICS_WINDOW entries
+        self.telemetry: collections.deque = \
+            collections.deque(maxlen=METRICS_WINDOW)
+        self.rejections: collections.deque = \
+            collections.deque(maxlen=METRICS_WINDOW)
+        self._pending: dict[int, collections.deque[Request]] = {}
+        self._n_pending = 0
+        self._completed: list[tuple[int, RequestResult]] = []
+        self._next_rid = 0
+        self._ewma: dict[tuple[int, int], float] = {}
+
+    # ------------------------------------------------------------ admission
+
+    def now(self) -> float:
+        return self.clock.now()
+
+    @property
+    def queue_depth(self) -> int:
+        return self._n_pending
+
+    def _reject(self, rid: int | None, reason: str, detail: str) -> None:
+        rej = Rejection(rid=rid, reason=reason, detail=detail, at=self.now())
+        self.rejections.append(rej)
+        if reason == "shed":
+            self.metrics.shed += 1
+        else:
+            self.metrics.rejected += 1
+
+    def _shed_oldest(self) -> None:
+        """Backpressure by displacement: drop the oldest pending request
+        (across all buckets) to make room for the new arrival."""
+        t_pad = min((q[0].arrival_t, tp) for tp, q in self._pending.items()
+                    if q)[1]
+        victim = self._pending[t_pad].popleft()
+        self._n_pending -= 1
+        self._reject(victim.rid, "shed",
+                     f"displaced after {self.now() - victim.arrival_t:.3g}s "
+                     f"in queue (capacity {self.queue_capacity})")
+
+    def submit(self, stream, *, deadline: float | None = None,
+               slack: float | None = None,
+               arrival_t: float | None = None) -> int | None:
+        """Admit one request at the current clock time.  Returns its rid, or
+        ``None`` if it was rejected (recorded in :attr:`rejections`).  The
+        deadline is absolute; ``slack`` is relative to now; neither given
+        falls back to ``default_slack``.  A group that reaches ``max_batch``
+        dispatches immediately — collect results via :meth:`poll`.
+
+        ``arrival_t`` back-dates the request's arrival for latency/TTFD
+        accounting (≤ now): on a virtual clock a request that physically
+        arrived while the executor was busy is only admitted once the
+        engine call returns, but its latency still counts from when the
+        sensor produced it."""
+        now = self.now()
+        if arrival_t is None:
+            arrival_t = now
+        assert arrival_t <= now + 1e-9, \
+            f"arrival_t {arrival_t} is in the future (now={now})"
+        self.metrics.submitted += 1
+        stream = np.asarray(stream, dtype=np.float32)
+        assert stream.ndim == 2 and stream.shape[1] == self.packed.n_in, \
+            f"expected [T, {self.packed.n_in}], got {stream.shape}"
+        t_len = stream.shape[0]
+        if t_len == 0:
+            self._reject(None, "empty", "zero-length spike train")
+            return None
+        needs_extend = not self.policy.fits(t_len)
+        if needs_extend and self.overlong == "reject":
+            self._reject(None, "overlong",
+                         f"{t_len} steps > largest time bucket "
+                         f"{self.policy.time_steps[-1]}")
+            return None
+        if self._n_pending >= self.queue_capacity:
+            if self.backpressure == "reject":
+                self._reject(None, "queue_full",
+                             f"queue at capacity {self.queue_capacity}")
+                return None
+            self._shed_oldest()
+        # grid extension is a side effect (new jit trace) — apply it only
+        # once the request is actually admitted
+        if needs_extend:
+            self.policy = self.policy.with_time_bucket(t_len)
+            self.metrics.policy_extensions += 1
+            _log.warning("stream_server: %d-step request extended the "
+                         "bucket grid to time_steps=%s (new jit trace)",
+                         t_len, self.policy.time_steps)
+        rid = self._next_rid
+        self._next_rid += 1
+        if deadline is None:
+            s = self.default_slack if slack is None else slack
+            deadline = arrival_t + s
+        req = Request(rid=rid, stream=stream, arrival_t=arrival_t,
+                      deadline=deadline, t_pad=self.policy.t_bucket(t_len))
+        self._pending.setdefault(req.t_pad, collections.deque()).append(req)
+        self._n_pending += 1
+        self.metrics.admitted += 1
+        self.metrics.queue_depth = self._n_pending
+        self.metrics.max_queue_depth = max(self.metrics.max_queue_depth,
+                                           self._n_pending)
+        if len(self._pending[req.t_pad]) >= self.policy.max_batch:
+            self._dispatch(req.t_pad, self.policy.max_batch, forced=False)
+        return rid
+
+    # ----------------------------------------------------------- scheduling
+
+    def _est_service(self, b_pad: int, t_pad: int) -> float:
+        if self.service_model is not None:
+            return float(self.service_model(b_pad, t_pad))
+        return self._ewma.get((b_pad, t_pad), 0.0)
+
+    def _trigger_time(self, t_pad: int) -> float:
+        """When the group forces a (possibly partial) dispatch: its
+        *tightest* member deadline minus the estimated service time for the
+        batch we would form now, minus the safety margin.  (Tightest, not
+        oldest: a best-effort ``inf``-deadline request admitted first must
+        not mask a deadline behind it.  Groups stay below ``max_batch`` —
+        full chunks dispatch at submit — so a forced dispatch always takes
+        the whole group, tight member included.)"""
+        q = self._pending[t_pad]
+        k = min(len(q), self.policy.max_batch)
+        b_pad = self.policy.b_bucket(k)
+        return (min(r.deadline for r in q)
+                - self._est_service(b_pad, t_pad) - self.dispatch_margin)
+
+    def next_deadline(self) -> float | None:
+        """The earliest instant at which :meth:`poll` would force a partial
+        dispatch — drivers advance their clock to ``min(next arrival,
+        next_deadline())``.  ``None`` when nothing pending has a finite
+        trigger."""
+        triggers = [self._trigger_time(tp) for tp, q in self._pending.items()
+                    if q]
+        finite = [t for t in triggers if t != math.inf]
+        return min(finite) if finite else None
+
+    def poll(self) -> list[tuple[int, RequestResult]]:
+        """Dispatch every group that is full or past its deadline trigger at
+        the current clock time; return all newly completed results."""
+        now = self.now()
+        for t_pad in sorted(self._pending,
+                            key=lambda tp: (min(r.deadline
+                                                for r in self._pending[tp])
+                                            if self._pending[tp] else math.inf)):
+            q = self._pending[t_pad]
+            # submit() dispatches a group the moment it reaches max_batch,
+            # so pending groups are always partial — only deadlines fire here
+            assert len(q) < self.policy.max_batch
+            if q and self._trigger_time(t_pad) <= now:
+                self._dispatch(t_pad, len(q), forced=True)
+        return self.collect()
+
+    def flush(self) -> list[tuple[int, RequestResult]]:
+        """Dispatch everything still pending (shutdown / end of trace) and
+        return all remaining completed results."""
+        for t_pad in sorted(self._pending):
+            q = self._pending[t_pad]
+            if q:
+                assert len(q) < self.policy.max_batch  # see poll()
+                self._dispatch(t_pad, len(q), forced=False)
+        return self.collect()
+
+    def collect(self) -> list[tuple[int, RequestResult]]:
+        """Completed ``(rid, result)`` pairs since the last collection."""
+        done, self._completed = self._completed, []
+        return done
+
+    # ------------------------------------------------------------ execution
+
+    def _dispatch(self, t_pad: int, k: int, forced: bool) -> None:
+        q = self._pending[t_pad]
+        reqs = [q.popleft() for _ in range(k)]
+        self._n_pending -= k
+        b_pad = self.policy.b_bucket(k)
+        dispatch_t = self.now()
+        plan = BatchPlan(indices=tuple(range(k)), b_pad=b_pad, t_pad=t_pad)
+        results, record = execute_plan(
+            self.packed, [r.stream for r in reqs], plan, mesh=self.mesh,
+            max_events=self.max_events,
+            sn_capacity_rows=self.sn_capacity_rows,
+            with_stats=self.with_stats)
+        self.telemetry.append(record)
+        key = (b_pad, t_pad)
+        prev = self._ewma.get(key)
+        self._ewma[key] = record["seconds"] if prev is None else \
+            _EWMA_ALPHA * record["seconds"] + (1 - _EWMA_ALPHA) * prev
+        if self.service_model is not None and hasattr(self.clock, "advance"):
+            self.clock.advance(float(self.service_model(b_pad, t_pad)))
+        end_t = self.now()
+        m = self.metrics
+        m.dispatches += 1
+        m.forced_dispatches += int(forced)
+        m.fill.append(k / b_pad)
+        m.queue_depth = self._n_pending
+        for req, res in zip(reqs, results):
+            self._completed.append((req.rid, res))
+            m.completed += 1
+            m.ttfd_s.append(dispatch_t - req.arrival_t)
+            m.latency_s.append(end_t - req.arrival_t)
+            m.deadline_misses += int(end_t > req.deadline)
+
+
+# ------------------------------------------------------------- trace driver
+
+def serve_trace(server: StreamServer, trace):
+    """Replay a time-stamped arrival trace through a :class:`StreamServer`
+    on a :class:`VirtualClock`, firing deadline-triggered dispatches at the
+    exact instants they become due between arrivals.
+
+    ``trace``: iterable of ``(arrival_t, stream)`` or ``(arrival_t, stream,
+    deadline)`` tuples, non-decreasing in ``arrival_t`` (absolute deadline;
+    ``None`` = the server's ``default_slack``).  When a simulated service
+    period (``service_model``) runs past the next arrival, that request is
+    admitted as soon as the executor frees up — back-dated to its true
+    arrival for latency accounting, exactly like a single-threaded server
+    draining a socket between engine calls.  Remaining requests are flushed
+    after the last arrival.  Returns ``(results, rids)``: a dict ``rid ->
+    RequestResult`` and the per-trace-entry rid (``None`` where admission
+    rejected the request).
+    """
+    clock = server.clock
+    assert isinstance(clock, VirtualClock), \
+        "serve_trace replays simulated time; build the server with a " \
+        "VirtualClock (a WallClock server is driven by real arrivals instead)"
+    results: dict[int, RequestResult] = {}
+    rids: list[int | None] = []
+
+    def drain(pairs):
+        for rid, res in pairs:
+            results[rid] = res
+
+    prev_t = -math.inf
+    for item in trace:
+        t_a, stream, deadline = item if len(item) == 3 else (*item, None)
+        assert t_a >= prev_t, \
+            f"trace arrivals must be non-decreasing ({t_a} < {prev_t})"
+        prev_t = t_a
+        while True:
+            nd = server.next_deadline()
+            if nd is None or nd > t_a:
+                break
+            clock.advance(max(0.0, nd - clock.now()))
+            fired = server.poll()
+            drain(fired)
+            if not fired:
+                break   # estimate moved the trigger; re-check next arrival
+        clock.advance(max(0.0, t_a - clock.now()))
+        rids.append(server.submit(stream, deadline=deadline,
+                                  arrival_t=min(t_a, clock.now())))
+        drain(server.poll())
+    drain(server.flush())
+    return results, rids

@@ -1,8 +1,9 @@
 """MENAGE serving launcher: continuous batching of DVS event streams over a
-data-parallel host mesh.
+data-parallel host mesh — closed-list or always-on async.
 
   PYTHONPATH=src python -m repro.launch.serve_snn --model both --requests 48 \
-      [--data 2] [--spoof-devices 2] [--smoke]
+      [--data 2] [--spoof-devices 2] [--smoke] \
+      [--arrivals poisson|bursty --rate 200 --slack 0.25]
 
 Requests are variable-length spike trains; the front end
 (:mod:`repro.engine.serving`) pads them into the policy's fixed ``(B, T)``
@@ -10,6 +11,13 @@ bucket grid (bounded jit cache, verified via ``trace_count``) and
 :func:`repro.engine.sharded_run.run_sharded` fans each bucket batch out over
 the mesh — batch axis sharded, control memories replicated, input buffers
 donated between steps on accelerator backends.
+
+``--arrivals poisson|bursty`` switches from the closed-list ``run_bucketed``
+pass to the always-on loop (:mod:`repro.engine.stream_server`): a
+time-stamped arrival process (Poisson, or bursts with exponential gaps at
+the same mean offered load) replays through a :class:`StreamServer` on a
+virtual clock, with per-request deadlines (``--slack``) forcing partial
+bucket dispatches and a bounded arrival queue applying backpressure.
 
 ``--spoof-devices N`` emulates an N-device host on CPU (sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax initializes;
@@ -33,7 +41,8 @@ from repro.core.accelerator import MappedModel, map_model  # noqa: E402
 from repro.core.energy import AcceleratorSpec  # noqa: E402
 from repro.core.layers import Conv2d, Dense, SumPool2d  # noqa: E402
 from repro.core.lif import LIFParams  # noqa: E402
-from repro.engine import (BucketPolicy, run_bucketed,  # noqa: E402
+from repro.engine import (BucketPolicy, StreamServer,  # noqa: E402
+                          VirtualClock, run_bucketed, serve_trace,
                           trace_count)
 from repro.engine.sharded_run import snn_serve_mesh  # noqa: E402
 
@@ -77,6 +86,72 @@ def synth_requests(n: int, n_in: int, *, t_lo: int = 4, t_hi: int = 30,
             for t in lengths]
 
 
+def synth_arrival_trace(n: int, n_in: int, *, mode: str = "poisson",
+                        rate: float = 200.0, burst: int = 6,
+                        t_lo: int = 4, t_hi: int = 30,
+                        spike_p: float = 0.15, slack: float = 0.25,
+                        seed: int = 0) -> list[tuple[float, np.ndarray, float]]:
+    """A time-stamped arrival process for the async server: ``n`` requests
+    as ``(arrival_t, stream, deadline)`` tuples, non-decreasing in time.
+
+    ``poisson`` draws i.i.d. exponential interarrivals at ``rate`` req/s —
+    the memoryless baseline.  ``bursty`` emits back-to-back bursts of
+    ``burst`` simultaneous requests with exponential gaps between bursts at
+    the *same* mean offered load — the adversarial case for batch
+    formation, where a deadline-blind scheduler would sit on partial
+    buckets.  Deadlines are ``arrival + slack`` seconds."""
+    rng = np.random.default_rng(seed)
+    lengths = rng.integers(t_lo, t_hi + 1, size=n)
+    if mode == "poisson":
+        times = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    elif mode == "bursty":
+        n_bursts = -(-n // burst)
+        starts = np.cumsum(rng.exponential(burst / rate, size=n_bursts))
+        times = np.repeat(starts, burst)[:n]
+    else:
+        raise ValueError(f"unknown arrival mode {mode!r} (poisson|bursty)")
+    return [(float(t_a),
+             (rng.random((int(t_len), n_in)) < spike_p).astype(np.float32),
+             float(t_a) + slack)
+            for t_a, t_len in zip(times, lengths)]
+
+
+def serve_async(model, trace, *, policy: BucketPolicy, mesh,
+                queue_capacity: int = 256, backpressure: str = "reject",
+                service_model=None, max_events: int | None = None,
+                with_stats: bool = False):
+    """One async serving pass over an arrival trace (virtual clock);
+    returns ``(results, rids, metrics)``.  ``metrics`` is the
+    ``ServerMetrics`` snapshot plus the trajectory numbers
+    ``BENCH_async_serving.json`` records: offered load, simulated-time
+    throughput, wall seconds, and the jit-trace delta."""
+    server = StreamServer(model, policy=policy, mesh=mesh,
+                          clock=VirtualClock(),
+                          queue_capacity=queue_capacity,
+                          backpressure=backpressure,
+                          service_model=service_model,
+                          max_events=max_events, with_stats=with_stats)
+    n0 = trace_count()
+    t0 = time.perf_counter()
+    results, rids = serve_trace(server, trace)
+    wall = time.perf_counter() - t0
+    snap = server.metrics.snapshot()
+    makespan = max(server.now(), 1e-9)
+    span = max(trace[-1][0] - trace[0][0], 1e-9) if len(trace) > 1 else 1e-9
+    events = sum(t["events"] for t in server.telemetry)
+    snap.update({
+        "requests": len(trace),
+        "offered_rps": len(trace) / span,
+        "throughput_rps": snap["completed"] / makespan,
+        "events_per_s": events / max(wall, 1e-9),
+        "makespan_s": makespan,
+        "wall_s": wall,
+        "new_traces": trace_count() - n0,
+        "n_buckets": server.policy.n_buckets,
+    })
+    return results, rids, snap
+
+
 def serve_stream(model, streams, *, policy: BucketPolicy, mesh,
                  max_events: int | None = None, with_stats: bool = False):
     """One serving pass; returns (results, metrics).  Metrics are the
@@ -116,6 +191,17 @@ def main():
                     help="emulate N CPU devices (set before jax init)")
     ap.add_argument("--max-events", type=int, default=None)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arrivals", default="closed",
+                    choices=["closed", "poisson", "bursty"],
+                    help="closed: drain a fixed request list (run_bucketed);"
+                         " poisson/bursty: always-on async loop over a"
+                         " synthetic arrival process (StreamServer)")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="mean offered load for async arrivals, requests/s")
+    ap.add_argument("--slack", type=float, default=0.25,
+                    help="per-request deadline slack, seconds after arrival")
+    ap.add_argument("--queue-capacity", type=int, default=256,
+                    help="async arrival-queue bound (backpressure kicks in)")
     args = ap.parse_args()
     assert_spoof_applied(_SPOOFED)
 
@@ -123,11 +209,44 @@ def main():
     n_shards = mesh.size
     kinds = ["mlp", "conv"] if args.model == "both" else [args.model]
     n_req = min(args.requests, 16) if args.smoke else args.requests
+    t_hi = 12 if args.smoke else 30
     for kind in kinds:
         model = build_demo_model(kind, smoke=args.smoke)
         packed = model.pack()
-        streams = synth_requests(n_req, packed.n_in,
-                                 t_hi=12 if args.smoke else 30, seed=1)
+        if args.arrivals != "closed":
+            trace = synth_arrival_trace(n_req, packed.n_in,
+                                        mode=args.arrivals, rate=args.rate,
+                                        slack=args.slack, t_hi=t_hi, seed=1)
+            policy = BucketPolicy.covering([s.shape[0] for _, s, _ in trace],
+                                           n_shards=n_shards,
+                                           max_batch=4 * n_shards)
+            # instantaneous-service simulation: batch formation then depends
+            # only on the (fixed) trace, so the warm replay compiles exactly
+            # the buckets the hot replay hits and the retrace gate below is
+            # deterministic (the bench calibrates real service times instead)
+            svc = lambda b, t: 0.0  # noqa: E731
+            serve_async(packed, trace, policy=policy, mesh=mesh,
+                        queue_capacity=args.queue_capacity,
+                        service_model=svc, max_events=args.max_events)
+            results, rids, m = serve_async(
+                packed, trace, policy=policy, mesh=mesh,
+                queue_capacity=args.queue_capacity,
+                service_model=svc, max_events=args.max_events)
+            assert m["new_traces"] == 0, "hot async pass retraced the jit!"
+            preds = [int(results[r].out_spikes.sum(axis=0).argmax())
+                     for r in rids[:8] if r is not None and r in results]
+            print(f"serve-async/{kind} [{args.arrivals}]: "
+                  f"{m['completed']}/{m['requests']} reqs over "
+                  f"{n_shards}-way mesh | offered {m['offered_rps']:.0f} "
+                  f"rps, served {m['throughput_rps']:.0f} rps | latency "
+                  f"p50 {m['p50_latency_s']*1e3:.1f} ms p99 "
+                  f"{m['p99_latency_s']*1e3:.1f} ms | miss rate "
+                  f"{m['deadline_miss_rate']:.3f} | fill "
+                  f"{m['bucket_fill_ratio']:.2f} | forced "
+                  f"{m['forced_dispatches']}/{m['dispatches']} | "
+                  f"buckets<= {m['n_buckets']} | sample preds {preds}")
+            continue
+        streams = synth_requests(n_req, packed.n_in, t_hi=t_hi, seed=1)
         policy = BucketPolicy.covering([s.shape[0] for s in streams],
                                        n_shards=n_shards,
                                        max_batch=4 * n_shards)

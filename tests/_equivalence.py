@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.accelerator import run
+from repro.core.accelerator import run_batch
 from repro.engine import batched_run as br
 
 STAT_FIELDS = ("cycles", "rows_touched", "engine_ops", "events",
@@ -21,11 +21,11 @@ def assert_oracle_engine_equivalent(model, spikes: np.ndarray,
                                     max_events: int | None = None,
                                     tag: str = ""):
     """Bit-exact equivalence of ``run_batched(model, spikes)`` vs the
-    oracle per sample: output spikes, every DispatchStats field,
+    batched oracle per sample: output spikes, every DispatchStats field,
     MEM_S&N utilization, and overflow — under the same MEM_E cap."""
     res = br.run_batched(model, spikes, max_events=max_events)
-    for b in range(spikes.shape[0]):
-        oracle = run(model, spikes[b], max_events=max_events)
+    for b, oracle in enumerate(run_batch(model, spikes,
+                                         max_events=max_events)):
         ctx = f"{tag} sample {b}"
         np.testing.assert_array_equal(res.out_spikes[b], oracle.out_spikes,
                                       err_msg=f"{ctx} spikes")

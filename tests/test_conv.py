@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.accelerator import map_model, reference_forward, run
+from repro.core.accelerator import map_model, reference_forward, run_batch
 from repro.core.energy import AcceleratorSpec
 from repro.core.layers import Conv2d, Dense, SumPool2d, as_layer_spec
 from repro.core.lif import LIFParams
@@ -187,8 +187,7 @@ def test_trained_conv_model_bit_exact_batch():
     batch = spikes[:8]
     res = br.run_batched(model, batch)
     assert res.out_spikes.sum() >= 0
-    for b in range(8):
-        oracle = run(model, batch[b])
+    for b, oracle in enumerate(run_batch(model, batch)):
         np.testing.assert_array_equal(res.out_spikes[b], oracle.out_spikes,
                                       err_msg=f"sample {b}")
         for li, (bs, os_) in enumerate(zip(res.sample_stats(b),

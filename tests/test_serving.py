@@ -18,7 +18,9 @@ from repro.core.accelerator import map_model, run
 from repro.core.energy import AcceleratorSpec
 from repro.core.layers import Conv2d, Dense, SumPool2d
 from repro.core.lif import LIFParams
-from repro.engine import (BucketPolicy, plan_batches, run_bucketed,
+from repro.engine import (METRIC_KEYS, BucketPolicy, OverlongRequestError,
+                          ServerMetrics, StreamServer, TELEMETRY_KEYS,
+                          VirtualClock, plan_batches, run_bucketed,
                           trace_count)
 from repro.engine.serving import BatchPlan
 
@@ -94,6 +96,15 @@ def test_policy_covering():
     assert p.time_steps[-1] >= 17
     assert all(b % 2 == 0 for b in p.batch_sizes)
     assert p.max_batch >= 8
+
+
+def test_policy_fits_and_extension():
+    p = BucketPolicy(batch_sizes=(1, 4), time_steps=(8, 16))
+    assert p.fits(16) and not p.fits(17) and not p.fits(0)
+    assert p.with_time_bucket(12) is p            # already covered
+    q = p.with_time_bucket(40)                    # 16 -> 32 -> 64
+    assert q.time_steps == (8, 16, 64) and q.fits(40)
+    assert p.time_steps == (8, 16)                # original untouched
 
 
 # --------------------------------------------------------------- scheduler
@@ -191,6 +202,66 @@ def test_bucketed_telemetry(rng):
     assert sum(t["n_requests"] for t in telemetry) == 3
     assert sum(t["events"] for t in telemetry) \
         == int(sum((s > 0).sum() for s in streams))
+
+
+# -------------------------------------------------- metrics schema locks
+
+def test_telemetry_schema_locked(rng):
+    """The per-engine-call telemetry record keys are a dashboard contract
+    (BENCH_serving.json): adding/renaming fields must update TELEMETRY_KEYS
+    and this test together."""
+    assert TELEMETRY_KEYS == ("b_pad", "t_pad", "n_requests", "events",
+                              "out_spikes", "seconds")
+    model = _dense_model(rng)
+    telemetry = []
+    run_bucketed(model, _streams(rng, 14, [4, 9]), telemetry=telemetry,
+                 policy=BucketPolicy(batch_sizes=(2,), time_steps=(4, 16)))
+    for t in telemetry:
+        assert tuple(t.keys()) == TELEMETRY_KEYS
+    # the async server emits the same records
+    server = StreamServer(model, clock=VirtualClock(),
+                          policy=BucketPolicy(batch_sizes=(2,),
+                                              time_steps=(4, 16)))
+    server.submit(_streams(rng, 14, [4])[0])
+    server.flush()
+    assert tuple(server.telemetry[0].keys()) == TELEMETRY_KEYS
+
+
+def test_server_metrics_schema_locked():
+    """ServerMetrics.snapshot() keys are the BENCH_async_serving.json
+    surface — locked so dashboards don't silently break."""
+    assert METRIC_KEYS == (
+        "submitted", "admitted", "rejected", "shed", "completed",
+        "deadline_misses", "deadline_miss_rate", "dispatches",
+        "forced_dispatches", "policy_extensions", "queue_depth",
+        "max_queue_depth", "bucket_fill_ratio", "p50_ttfd_s", "p99_ttfd_s",
+        "p50_latency_s", "p99_latency_s")
+    snap = ServerMetrics().snapshot()
+    assert tuple(snap.keys()) == METRIC_KEYS
+    assert snap["deadline_miss_rate"] == 0.0      # no div-by-zero when idle
+
+
+# ------------------------------------------------- over-long requests
+
+def test_bucketed_overlong_error_names_requests(rng):
+    """An over-long request fails at admission with a per-request error,
+    not mid-plan after other requests already ran."""
+    model = _dense_model(rng)
+    streams = _streams(rng, 14, [4, 40, 3, 99])
+    policy = BucketPolicy(batch_sizes=(2,), time_steps=(4, 8))
+    with pytest.raises(OverlongRequestError) as ei:
+        run_bucketed(model, streams, policy=policy)
+    assert ei.value.requests == [(1, 40), (3, 99)]
+    assert "request 1: 40 steps" in str(ei.value)
+
+
+def test_bucketed_overlong_extend_matches_oracle(rng):
+    model = _dense_model(rng)
+    streams = _streams(rng, 14, [4, 40, 3])
+    policy = BucketPolicy(batch_sizes=(2,), time_steps=(4, 8))
+    res = run_bucketed(model, streams, policy=policy, overlong="extend")
+    for req, s in zip(res, streams):
+        _assert_request_matches_oracle(req, model, s)
 
 
 # ------------------------------------------------- jit-cache churn (bugfix)

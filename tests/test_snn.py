@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.accelerator import map_model, run
+from repro.core.accelerator import map_model, run_batch
 from repro.core.energy import AcceleratorSpec
 from repro.core.lif import LIFParams
 from repro.core.prune import prune_pytree, sparsity
@@ -63,8 +63,7 @@ def test_full_flow_on_accelerator(trained):
                       lif=snn.lif, quant_bits=8)
     n = 16
     correct = 0
-    for i in range(n):
-        res = run(model, spikes[i])
+    for i, res in enumerate(run_batch(model, spikes[:n])):
         pred = res.out_spikes.sum(axis=0).argmax()
         correct += int(pred == labels[i])
     acc_ref = _accuracy(dq, snn, spikes[:n], labels[:n])

@@ -1,0 +1,305 @@
+"""Always-on async serving loop: bit-exactness, deadlines, backpressure.
+
+Contracts under test (engine/stream_server.py):
+
+  * every result served through the async loop is bit-identical to
+    ``run_bucketed`` on the same request set — and transitively to the
+    numpy oracle — deterministically and as a hypothesis property over
+    random arrival traces (random lengths, gaps, and deadlines);
+  * the scheduler dispatches a *partially-full* bucket before the oldest
+    pending request's deadline expires (deadline-miss rate 0 at low load)
+    and the jit-trace count stays <= ``policy.n_buckets``;
+  * the arrival queue is bounded: ``reject`` and ``shed_oldest``
+    backpressure policies, over-long requests rejected (or grid-extended)
+    at admission with per-request reasons.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from _equivalence import STAT_FIELDS
+from _hypothesis_compat import given, settings, st
+
+from repro.core.accelerator import map_model
+from repro.core.energy import AcceleratorSpec
+from repro.core.lif import LIFParams
+from repro.engine import (BucketPolicy, StreamServer, VirtualClock,
+                          run_bucketed, serve_trace, trace_count)
+
+SPEC = AcceleratorSpec("stream-test", n_cores=3, n_engines=4, n_caps=8,
+                       weight_mem_bytes=1 << 18)
+N_IN = 14
+
+
+@pytest.fixture(scope="module")
+def packed():
+    rng = np.random.default_rng(7)
+    ws = []
+    for a, b in ((N_IN, 12), (12, 6)):
+        w = rng.normal(0, 0.5, (a, b)).astype(np.float32)
+        w[rng.random(w.shape) > 0.6] = 0
+        ws.append(w)
+    return map_model(ws, SPEC, lif=LIFParams(beta=0.8, threshold=0.7)).pack()
+
+
+def _streams(rng, lengths, p=0.35):
+    return [(rng.random((t, N_IN)) < p).astype(np.float32) for t in lengths]
+
+
+def _policy():
+    return BucketPolicy(batch_sizes=(1, 2, 4), time_steps=(4, 8))
+
+
+def _assert_request_results_equal(a, b, tag=""):
+    np.testing.assert_array_equal(a.out_spikes, b.out_spikes,
+                                  err_msg=f"{tag} spikes")
+    assert len(a.stats) == len(b.stats), tag
+    for li, (sa, sb) in enumerate(zip(a.stats, b.stats)):
+        for f in STAT_FIELDS:
+            np.testing.assert_array_equal(getattr(sa, f), getattr(sb, f),
+                                          err_msg=f"{tag} layer {li} {f}")
+        assert sa.mem_e_peak == sb.mem_e_peak, f"{tag} layer {li}"
+        np.testing.assert_array_equal(a.util[li], b.util[li],
+                                      err_msg=f"{tag} layer {li} util")
+        np.testing.assert_array_equal(a.overflow[li], b.overflow[li],
+                                      err_msg=f"{tag} layer {li} overflow")
+    if a.stats:
+        assert a.energy() == b.energy(), tag
+        assert a.energy(frame_cycles=None) == b.energy(frame_cycles=None), tag
+
+
+# ------------------------------------------------ bit-exactness vs bucketed
+
+def test_async_matches_bucketed_deterministic(rng, packed):
+    """The async loop and the closed-list path serve the same request set
+    bit-identically on every result surface (and run_bucketed is itself
+    oracle-equivalent, so transitively the async loop matches the oracle)."""
+    lengths = [3, 7, 5, 8, 2, 8, 1]
+    streams = _streams(rng, lengths)
+    ref = run_bucketed(packed, streams, policy=_policy())
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock(),
+                          with_stats=True)
+    trace = [(0.05 * i, s) for i, s in enumerate(streams)]
+    results, rids = serve_trace(server, trace)
+    assert rids == list(range(len(streams)))
+    snap = server.metrics.snapshot()
+    assert snap["completed"] == len(streams) and snap["rejected"] == 0
+    for i, r in enumerate(ref):
+        _assert_request_results_equal(results[rids[i]], r, tag=f"req {i}")
+
+
+def test_async_matches_oracle_under_max_events(rng, packed):
+    """The MEM_E cap threads through the async path identically."""
+    streams = _streams(rng, [3, 6, 5], p=0.7)
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock(),
+                          with_stats=True, max_events=2)
+    results, rids = serve_trace(server, [(0.0, s) for s in streams])
+    ref = run_bucketed(packed, streams, policy=_policy(), max_events=2)
+    for i in range(len(streams)):
+        _assert_request_results_equal(results[rids[i]], ref[i], tag=f"req {i}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_async_property_random_traces(packed, data):
+    """Property: for ANY arrival trace (random lengths, inter-arrival gaps,
+    and finite/infinite deadlines), every admitted request's output spikes
+    are bit-identical to the closed-list bucketed run of the same streams."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    n = data.draw(st.integers(1, 8))
+    lengths = [data.draw(st.integers(1, 8)) for _ in range(n)]
+    gaps = [data.draw(st.floats(0.0, 0.4)) for _ in range(n)]
+    slacks = [data.draw(st.sampled_from([0.05, 0.3, math.inf]))
+              for _ in range(n)]
+    streams = _streams(rng, lengths)
+    times = np.cumsum(gaps)
+    trace = [(float(t), s, float(t) + sl)
+             for t, s, sl in zip(times, streams, slacks)]
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock(),
+                          service_model=lambda b, t: 0.01)
+    results, rids = serve_trace(server, trace)
+    ref = run_bucketed(packed, streams, policy=_policy(), with_stats=False)
+    assert all(r is not None for r in rids)    # nothing rejected here
+    for i in range(n):
+        np.testing.assert_array_equal(results[rids[i]].out_spikes,
+                                      ref[i].out_spikes,
+                                      err_msg=f"request {i} (T={lengths[i]})")
+    snap = server.metrics.snapshot()
+    assert snap["completed"] == n
+
+
+# ------------------------------------------------------- deadline pressure
+
+def test_deadline_forces_partial_dispatch(rng, packed):
+    """Bursty arrivals smaller than the bucket: the scheduler must dispatch
+    a partially-full bucket before the oldest request's deadline expires —
+    zero misses at low load — instead of waiting for the bucket to fill."""
+    policy = BucketPolicy(batch_sizes=(4,), time_steps=(8,))
+    streams = _streams(rng, [5, 6, 3])
+    server = StreamServer(packed, policy=policy, clock=VirtualClock(),
+                          service_model=lambda b, t: 0.1)
+    n0 = trace_count()
+    # two requests at t~0 with 1s deadlines; next arrival far beyond them
+    trace = [(0.0, streams[0], 1.0), (0.05, streams[1], 1.05),
+             (50.0, streams[2], 51.0)]
+    results, rids = serve_trace(server, trace)
+    snap = server.metrics.snapshot()
+    assert snap["forced_dispatches"] >= 1, "deadline never forced a dispatch"
+    assert snap["deadline_misses"] == 0 and snap["deadline_miss_rate"] == 0.0
+    # the forced dispatch was partially full: 2 requests in a 4-wide bucket
+    assert 0.5 in server.metrics.fill
+    assert trace_count() - n0 <= policy.n_buckets
+    # and it dispatched *before* the deadline: completion = trigger(0.9)
+    # + service(0.1) = deadline exactly, so TTFD < slack
+    assert max(list(server.metrics.ttfd_s)[:2]) < 1.0
+    ref = run_bucketed(packed, streams, policy=policy, with_stats=False)
+    for i in range(3):
+        np.testing.assert_array_equal(results[rids[i]].out_spikes,
+                                      ref[i].out_spikes)
+
+
+def test_tight_deadline_behind_best_effort_request(rng, packed):
+    """A best-effort (inf-deadline) request admitted first must not mask a
+    tight deadline behind it in the same bucket: the trigger tracks the
+    group's *tightest* member, and the forced dispatch takes both."""
+    policy = BucketPolicy(batch_sizes=(4,), time_steps=(8,))
+    server = StreamServer(packed, policy=policy, clock=VirtualClock(),
+                          service_model=lambda b, t: 0.1)
+    streams = _streams(rng, [5, 6])
+    server.submit(streams[0])                       # best-effort, inf slack
+    server.submit(streams[1], slack=1.0)            # tight, behind it
+    assert server.next_deadline() == pytest.approx(0.9)
+    server.clock.advance(0.9)
+    done = server.poll()
+    assert len(done) == 2 and server.queue_depth == 0
+    snap = server.metrics.snapshot()
+    assert snap["forced_dispatches"] == 1 and snap["deadline_misses"] == 0
+
+
+def test_full_bucket_dispatches_immediately(rng, packed):
+    """A group that reaches max_batch dispatches at submit time, no
+    deadline involvement (forced == 0), even with infinite slack."""
+    policy = BucketPolicy(batch_sizes=(2,), time_steps=(8,))
+    server = StreamServer(packed, policy=policy, clock=VirtualClock())
+    streams = _streams(rng, [4, 6])
+    for s in streams:
+        server.submit(s)
+    done = server.collect()
+    assert len(done) == 2 and server.queue_depth == 0
+    snap = server.metrics.snapshot()
+    assert snap["dispatches"] == 1 and snap["forced_dispatches"] == 0
+    assert snap["bucket_fill_ratio"] == pytest.approx(1.0)
+
+
+def test_infinite_slack_waits_for_flush(rng, packed):
+    """Best-effort requests (no deadline) below max_batch sit in the queue
+    until flush — next_deadline() reports nothing to wake up for."""
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock())
+    server.submit(_streams(rng, [5])[0])
+    assert server.next_deadline() is None
+    assert server.poll() == [] and server.queue_depth == 1
+    done = server.flush()
+    assert len(done) == 1 and server.queue_depth == 0
+
+
+# ----------------------------------------------------------- backpressure
+
+def test_backpressure_reject(rng, packed):
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock(),
+                          queue_capacity=2, backpressure="reject")
+    streams = _streams(rng, [3, 3, 3])
+    rids = [server.submit(s) for s in streams]
+    assert rids[0] is not None and rids[1] is not None and rids[2] is None
+    assert server.rejections[-1].reason == "queue_full"
+    snap = server.metrics.snapshot()
+    assert snap["rejected"] == 1 and snap["admitted"] == 2
+    assert snap["queue_depth"] == 2 == snap["max_queue_depth"]
+    assert len(server.flush()) == 2
+
+
+def test_backpressure_shed_oldest(rng, packed):
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock(),
+                          queue_capacity=2, backpressure="shed_oldest")
+    streams = _streams(rng, [3, 3, 3])
+    rids = [server.submit(s) for s in streams]
+    assert all(r is not None for r in rids)       # newest always admitted
+    assert server.rejections[-1].reason == "shed"
+    assert server.rejections[-1].rid == rids[0]   # oldest displaced
+    done = dict(server.flush())
+    assert set(done) == {rids[1], rids[2]}
+    snap = server.metrics.snapshot()
+    assert snap["shed"] == 1 and snap["completed"] == 2
+
+
+# ------------------------------------------------------ admission control
+
+def test_overlong_rejected_at_admission(rng, packed):
+    policy = BucketPolicy(batch_sizes=(2,), time_steps=(4,))
+    server = StreamServer(packed, policy=policy, clock=VirtualClock())
+    ok = server.submit(_streams(rng, [4])[0])
+    bad = server.submit(_streams(rng, [9])[0])
+    assert ok is not None and bad is None
+    assert server.rejections[-1].reason == "overlong"
+    assert "9 steps" in server.rejections[-1].detail
+    assert len(server.flush()) == 1               # the batch plan survived
+
+
+def test_overlong_extends_grid(rng, packed):
+    policy = BucketPolicy(batch_sizes=(2,), time_steps=(4,))
+    server = StreamServer(packed, policy=policy, clock=VirtualClock(),
+                          overlong="extend")
+    stream = _streams(rng, [9])[0]
+    rid = server.submit(stream)
+    assert rid is not None
+    assert server.policy.time_steps == (4, 16)    # doubled until it covers
+    assert server.metrics.snapshot()["policy_extensions"] == 1
+    done = dict(server.flush())
+    oracle = run_bucketed(packed, [stream], policy=server.policy,
+                          with_stats=False)[0]
+    np.testing.assert_array_equal(done[rid].out_spikes, oracle.out_spikes)
+
+
+def test_overlong_rejected_by_backpressure_leaves_grid_alone(rng, packed):
+    """Grid extension is a side effect of *admission*: an over-long request
+    that then bounces off the full queue must not have grown the policy."""
+    policy = BucketPolicy(batch_sizes=(2,), time_steps=(4,))
+    server = StreamServer(packed, policy=policy, clock=VirtualClock(),
+                          overlong="extend", queue_capacity=1)
+    assert server.submit(_streams(rng, [3])[0]) is not None   # fills queue
+    assert server.submit(_streams(rng, [9])[0]) is None
+    assert server.rejections[-1].reason == "queue_full"
+    assert server.policy.time_steps == (4,)       # untouched
+    assert server.metrics.snapshot()["policy_extensions"] == 0
+
+
+def test_empty_stream_rejected(rng, packed):
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock())
+    assert server.submit(np.zeros((0, N_IN), np.float32)) is None
+    assert server.rejections[-1].reason == "empty"
+    assert server.metrics.snapshot()["rejected"] == 1
+
+
+# -------------------------------------------------------- jit-cache bound
+
+def test_async_trace_bound_and_hot_replay(rng, packed):
+    """A mixed async trace costs at most n_buckets traces; replaying the
+    same trace costs zero — the always-on loop keeps the cache bounded."""
+    # B=3 buckets are unique to this test, so the cold pass must trace
+    policy = BucketPolicy(batch_sizes=(3,), time_steps=(4, 8))
+    streams = _streams(rng, [1, 2, 3, 5, 7, 8, 4, 6, 8, 2])
+    trace = [(0.02 * i, s) for i, s in enumerate(streams)]
+
+    def one_pass():
+        server = StreamServer(packed, policy=policy, clock=VirtualClock(),
+                              default_slack=0.07)
+        return serve_trace(server, trace)
+
+    n0 = trace_count()
+    one_pass()
+    total = trace_count() - n0
+    assert 0 < total <= policy.n_buckets, \
+        f"{total} traces > {policy.n_buckets} buckets"
+    n1 = trace_count()
+    one_pass()
+    assert trace_count() == n1, "hot async replay retraced the jit"
