@@ -21,8 +21,9 @@ import numpy as np
 from repro.core.prune import prune_pytree, sparsity
 from repro.core.quant import quantize_pytree
 from repro.data.events import EventDatasetConfig, event_batches, synthetic_event_dataset
-from repro.snn.conv import conv_snn_forward, train_conv_snn
-from repro.snn.mlp import SNNConfig, snn_forward, train_snn
+from repro.engine import SNNTrainConfig, model_for, train_snn_model
+from repro.snn.conv import conv_snn_forward
+from repro.snn.mlp import SNNConfig, snn_forward
 
 
 def _accuracy(params, snn, spikes, labels, batch=64, forward=snn_forward):
@@ -42,8 +43,10 @@ def run_one(tag, data_cfg, snn_cfg, steps, prune_amt=0.5, n_per_class=24):
     tr_s, tr_l = spikes[n_test:], labels[n_test:]
     te_s, te_l = spikes[:n_test], labels[:n_test]
     it = event_batches(tr_s, tr_l, batch=32)
-    params, hist = train_snn(jax.random.key(1), snn_cfg, it, steps=steps,
-                             lr=1e-3)
+    params, _ = train_snn_model(model_for(snn_cfg), snn_cfg, it,
+                                SNNTrainConfig(steps=steps, lr=1e-3,
+                                               log_every=1000),
+                                key=jax.random.key(1), log_fn=lambda s: None)
     acc0 = _accuracy(params, snn_cfg, te_s, te_l)
     pruned, _ = prune_pytree(params, prune_amt)
     _, dq = quantize_pytree(pruned)
@@ -60,8 +63,10 @@ def run_one_conv(tag, data_cfg, conv_cfg, steps, prune_amt=0.5,
     spikes, labels = synthetic_event_dataset(data_cfg, n_per_class, key)
     n_test = len(labels) // 5
     it = event_batches(spikes[n_test:], labels[n_test:], batch=32)
-    params, _ = train_conv_snn(jax.random.key(1), conv_cfg, it, steps=steps,
-                               lr=1e-3)
+    params, _ = train_snn_model(model_for(conv_cfg), conv_cfg, it,
+                                SNNTrainConfig(steps=steps, lr=1e-3,
+                                               log_every=1000),
+                                key=jax.random.key(1), log_fn=lambda s: None)
     te_s, te_l = spikes[:n_test], labels[:n_test]
     acc0 = _accuracy(params, conv_cfg, te_s, te_l, forward=conv_snn_forward)
     pruned, _ = prune_pytree(params, prune_amt)

@@ -25,14 +25,17 @@ from repro.core.energy import ACCEL_1, ACCEL_2
 from repro.core.prune import prune_pytree
 from repro.core.quant import quantize_pytree
 from repro.data.events import event_batches, synthetic_event_dataset
-from repro.snn.conv import layer_specs, train_conv_snn
-from repro.snn.mlp import train_snn
+from repro.engine import SNNTrainConfig, model_for, train_snn_model
+from repro.snn.conv import layer_specs
 
 
 def _prepare(data_cfg, snn_cfg, train_steps: int, key):
     spikes, labels = synthetic_event_dataset(data_cfg, n_per_class=8, key=key)
     it = event_batches(spikes, labels, batch=16)
-    params, _ = train_snn(key, snn_cfg, it, steps=train_steps, lr=1e-3)
+    params, _ = train_snn_model(model_for(snn_cfg), snn_cfg, it,
+                                SNNTrainConfig(steps=train_steps, lr=1e-3,
+                                               log_every=1000),
+                                key=key, log_fn=lambda s: None)
     pruned, _ = prune_pytree(params, 0.5)
     _, dq = quantize_pytree(pruned)
     return [np.asarray(w) for w in dq], spikes
@@ -63,7 +66,10 @@ def measure_conv(spec, data_cfg, conv_cfg, n_images: int = 2,
     key = jax.random.key(seed)
     spikes, labels = synthetic_event_dataset(data_cfg, n_per_class=8, key=key)
     it = event_batches(spikes, labels, batch=16)
-    params, _ = train_conv_snn(key, conv_cfg, it, steps=train_steps, lr=1e-3)
+    params, _ = train_snn_model(model_for(conv_cfg), conv_cfg, it,
+                                SNNTrainConfig(steps=train_steps, lr=1e-3,
+                                               log_every=1000),
+                                key=key, log_fn=lambda s: None)
     pruned, _ = prune_pytree(params, 0.5)
     model = map_model(layer_specs(pruned, conv_cfg), spec, lif=conv_cfg.lif)
     reports = [run(model, spikes[i]).energy for i in range(n_images)]

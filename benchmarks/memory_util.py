@@ -31,8 +31,9 @@ from repro.core.layers import Dense
 from repro.core.lif import LIFParams
 from repro.data.events import (EventDatasetConfig, event_batches,
                                synthetic_event_dataset)
-from repro.engine import run_bucketed
-from repro.snn.conv import ConvSNNConfig, layer_specs, train_conv_snn
+from repro.engine import (SNNTrainConfig, model_for, run_bucketed,
+                          train_snn_model)
+from repro.snn.conv import ConvSNNConfig, layer_specs
 from repro.snn.mlp import SNNConfig
 
 
@@ -63,7 +64,10 @@ def measure_conv(spec, data_cfg, conv_cfg, train_steps=10, image: int = 0):
     key = jax.random.key(0)
     spikes, labels = synthetic_event_dataset(data_cfg, n_per_class=4, key=key)
     it = event_batches(spikes, labels, batch=8)
-    params, _ = train_conv_snn(key, conv_cfg, it, steps=train_steps, lr=1e-3)
+    params, _ = train_snn_model(model_for(conv_cfg), conv_cfg, it,
+                                SNNTrainConfig(steps=train_steps, lr=1e-3,
+                                               log_every=1000),
+                                key=key, log_fn=lambda s: None)
     pruned, _ = prune_pytree(params, 0.5)
     model = map_model(layer_specs(pruned, conv_cfg), spec, lif=conv_cfg.lif)
     res = run_bucketed(model, [spikes[image]])[0]

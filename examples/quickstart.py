@@ -18,8 +18,10 @@ from repro.core.energy import AcceleratorSpec
 from repro.core.prune import prune_pytree, sparsity
 from repro.core.quant import quantize_pytree
 from repro.data.events import EventDatasetConfig, event_batches, synthetic_event_dataset
-from repro.engine import BucketPolicy, run_batched, run_bucketed, trace_count
-from repro.snn.mlp import SNNConfig, snn_forward_batch_major, train_snn
+from repro.engine import (BucketPolicy, MLP_MODEL, SNNTrainConfig,
+                          run_batched, run_bucketed, trace_count,
+                          train_snn_model)
+from repro.snn.mlp import SNNConfig, snn_forward_batch_major
 
 
 def main():
@@ -30,10 +32,14 @@ def main():
     spikes, labels = synthetic_event_dataset(data_cfg, n_per_class=16,
                                              key=jax.random.key(0))
 
-    # 2. train (surrogate gradients), prune, quantize (Algorithm 1 steps 1-3)
+    # 2. train (surrogate gradients, unified engine loop), prune, quantize
+    #    (Algorithm 1 steps 1-3)
     it = event_batches(spikes, labels, batch=32)
-    params, hist = train_snn(jax.random.key(1), snn_cfg, it, steps=200)
-    print(f"trained: final loss={hist[-1][1]:.3f} acc={hist[-1][2]:.2f}")
+    params, hist = train_snn_model(MLP_MODEL, snn_cfg, it,
+                                   SNNTrainConfig(steps=200, log_every=100),
+                                   key=jax.random.key(1))
+    print(f"trained: final loss={hist['loss'][-1]:.3f} "
+          f"acc={hist['acc'][-1]:.2f}")
     pruned, _ = prune_pytree(params, 0.5)
     _, weights = quantize_pytree(pruned)
     print(f"pruned to {sparsity(pruned):.0%} sparsity, 8-bit quantized")

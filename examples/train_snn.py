@@ -1,45 +1,87 @@
-"""End-to-end driver: train a MENAGE evaluation model with fault-tolerant
-checkpointing, then run the full prune -> quantize -> map -> execute flow.
+"""End-to-end driver: train a MENAGE evaluation model through the unified
+sharded training engine (`repro.engine.snn_train`), then run the full
+prune -> quantize -> map -> execute flow.
 
   --model mlp   (default) the paper's N-MNIST MLP (200/100/40/10) on Accel_1
   --model conv  the spiking CNN (conv->LIF->pool x2 + dense head) on the
                 synthetic CIFAR10-DVS stream, lowered layer-spec by layer-spec
                 (Conv2d with shared weight-SRAM words) onto Accel_2
 
-  PYTHONPATH=src python examples/train_snn.py [--steps 300] [--model conv]
+Both families train through the same `train_snn_model` entry point: AdamW
+via `engine/train_loop.py` (async checkpoints -> the run is resume-aware:
+re-launching with the same --ckpt continues from the last checkpoint),
+data-parallel over a ("data",) mesh when more than one device is visible
+(`--spoof-devices N` emulates an N-device host on CPU), step-keyed batches
+so restarts replay the exact remaining data.
+
+  PYTHONPATH=src python examples/train_snn.py [--steps 300] [--model conv] \
+      [--spoof-devices 8] [--ckpt /tmp/menage_snn_ckpt]
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch._spoof import (assert_spoof_applied,
+                                 spoof_devices_from_argv)
 
-from repro.configs.menage_paper import (CIFAR_CONV, CIFAR_CONV_DATA,
+_SPOOFED = spoof_devices_from_argv()  # before any jax import in this process
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.menage_paper import (CIFAR_CONV, CIFAR_CONV_DATA,  # noqa: E402
                                         NMNIST_DATA, NMNIST_SNN)
-from repro.core.accelerator import map_model, run
-from repro.core.energy import ACCEL_1, ACCEL_2
-from repro.core.prune import prune_pytree
-from repro.core.quant import quantize_pytree
-from repro.data.events import event_batches, synthetic_event_dataset
-from repro.engine import BucketPolicy, run_bucketed, trace_count
-from repro.snn.conv import conv_snn_forward, layer_specs, train_conv_snn
-from repro.snn.mlp import init_snn, snn_forward, snn_loss, train_snn
-from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.core.accelerator import map_model, run  # noqa: E402
+from repro.core.energy import ACCEL_1, ACCEL_2  # noqa: E402
+from repro.core.prune import prune_pytree  # noqa: E402
+from repro.core.quant import quantize_pytree  # noqa: E402
+from repro.data.events import event_batch_at, synthetic_event_dataset  # noqa: E402
+from repro.engine import (BucketPolicy, SNNTrainConfig, model_for,  # noqa: E402
+                          run_bucketed, snn_train_mesh, trace_count,
+                          train_snn_model)
+from repro.snn.conv import conv_snn_forward, layer_specs  # noqa: E402
+from repro.snn.mlp import snn_forward  # noqa: E402
+
+
+def _train(cfg, spikes, labels, n_test, args, *, batch, name):
+    """Unified training: sharded over all visible devices, resume-aware."""
+    mesh = snn_train_mesh() if len(jax.devices()) > 1 else None
+    if mesh is not None:
+        print(f"{name}: data-parallel over {mesh.size} device(s)")
+    # grad_shards pinned (not left to the mesh): the gradient arithmetic is
+    # then device-count-independent, so re-launching with a different
+    # --spoof-devices count resumes the SAME loss trajectory bit for bit
+    # (any device count dividing 8 shards the chunks; others replicate)
+    train_cfg = SNNTrainConfig(
+        steps=args.steps, lr=1e-3, mesh=mesh, grad_shards=8,
+        checkpoint_dir=f"{args.ckpt}_{name}", checkpoint_every=100,
+        log_every=50)
+
+    def batch_of(step):
+        return event_batch_at(spikes[n_test:], labels[n_test:], batch, step)
+
+    model = model_for(cfg)
+    params, hist = train_snn_model(model, cfg, batch_of, train_cfg,
+                                   key=jax.random.key(1))
+    if hist["loss"]:
+        print(f"{name} train: loss={hist['loss'][-1]:.3f} "
+              f"acc={hist['acc'][-1]:.2f} "
+              f"(checkpoints at {hist['checkpoints']})")
+    else:
+        print(f"{name}: checkpoint already at step {train_cfg.steps} — "
+              f"nothing left to train")
+    return params
 
 
 def main_conv(args):
-    """Conv path: train briefly, prune, lower to Conv2d/SumPool2d/Dense
-    specs, map onto Accel_2, and cross-check the two executers."""
+    """Conv path: train through the unified engine, prune, lower to
+    Conv2d/SumPool2d/Dense specs, map onto Accel_2, and cross-check the two
+    executers."""
     cfg = CIFAR_CONV
-    key = jax.random.key(0)
     spikes, labels = synthetic_event_dataset(CIFAR_CONV_DATA, n_per_class=16,
-                                             key=key)
+                                             key=jax.random.key(0))
     n_test = len(labels) // 5
-    train_it = event_batches(spikes[n_test:], labels[n_test:], batch=32)
-    params, hist = train_conv_snn(jax.random.key(1), cfg, train_it,
-                                  steps=args.steps, log_every=50)
-    print(f"conv train: loss={hist[-1][1]:.3f} acc={hist[-1][2]:.2f}")
+    params = _train(cfg, spikes, labels, n_test, args, batch=32, name="conv")
 
     counts, _ = conv_snn_forward(
         params, jnp.asarray(spikes[:n_test].swapaxes(0, 1)), cfg)
@@ -70,33 +112,18 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--ckpt", default="/tmp/menage_snn_ckpt")
     ap.add_argument("--model", choices=("mlp", "conv"), default="mlp")
+    ap.add_argument("--spoof-devices", type=int, default=None,
+                    help="emulate N CPU devices (set before jax init)")
     args = ap.parse_args()
+    assert_spoof_applied(_SPOOFED)
     if args.model == "conv":
         return main_conv(args)
 
-    key = jax.random.key(0)
     spikes, labels = synthetic_event_dataset(NMNIST_DATA, n_per_class=32,
-                                             key=key)
+                                             key=jax.random.key(0))
     n_test = len(labels) // 5
-    train_it = event_batches(spikes[n_test:], labels[n_test:], batch=64)
-
-    # resume-aware training
-    mgr = CheckpointManager(args.ckpt, keep=2)
-    params = init_snn(jax.random.key(1), NMNIST_SNN)
-    start = latest_step(args.ckpt) or 0
-    if start:
-        params = restore_checkpoint(args.ckpt, start, params)
-        print(f"resumed from step {start}")
-    chunk = 100
-    step = start
-    while step < args.steps:
-        n = min(chunk, args.steps - step)
-        params, hist = train_snn(key, NMNIST_SNN, train_it, steps=n,
-                                 params=params)
-        step += n
-        mgr.save_async(step, params)
-        print(f"step {step}: loss={hist[-1][1]:.3f} acc={hist[-1][2]:.2f}")
-    mgr.wait()
+    params = _train(NMNIST_SNN, spikes, labels, n_test, args, batch=64,
+                    name="mlp")
 
     # eval
     counts, _ = snn_forward(params,

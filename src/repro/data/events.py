@@ -88,3 +88,15 @@ def event_batches(spikes: np.ndarray, labels: np.ndarray, batch: int,
     while True:
         idx = rng.integers(0, n, size=batch)
         yield jnp.asarray(spikes[idx].swapaxes(0, 1)), jnp.asarray(labels[idx])
+
+
+def event_batch_at(spikes: np.ndarray, labels: np.ndarray, batch: int,
+                   step: int, seed: int = 0):
+    """The step-keyed batch: time-major ``(spikes [T, B, n_in], labels
+    [B])`` derived from ``(seed, step)`` alone, so a restarted training run
+    replays the exact remaining batches with no reader state — the
+    restart-safe data form :func:`repro.engine.snn_train.train_snn_model`
+    wants (same contract as ``data/tokens.token_batch``)."""
+    rng = np.random.default_rng((seed, step))
+    idx = rng.integers(0, spikes.shape[0], size=batch)
+    return spikes[idx].swapaxes(0, 1), labels[idx]

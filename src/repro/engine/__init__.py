@@ -1,6 +1,7 @@
 from repro.engine.batched_run import (BatchedDispatchStats, BatchedRunResult,  # noqa: F401
                                       PackedLayer, PackedModel, PackedRound,
-                                      pack_model, run_batched, trace_count)
+                                      pack_model, run_batched, should_donate,
+                                      trace_count)
 from repro.engine.serving import (BucketPolicy, OverlongRequestError,  # noqa: F401
                                   RequestResult, TELEMETRY_KEYS,
                                   execute_plan, plan_batches, run_bucketed)
@@ -9,3 +10,7 @@ from repro.engine.stream_server import (METRIC_KEYS, Rejection,  # noqa: F401
                                         Request, ServerMetrics, StreamServer,
                                         VirtualClock, WallClock, serve_trace)
 from repro.engine.train_loop import TrainLoopConfig, TrainState, make_train_step, train_loop  # noqa: F401
+from repro.engine.snn_train import (CONV_MODEL, MLP_MODEL, SNNModel,  # noqa: F401
+                                    SNNTrainConfig, make_snn_train_step,
+                                    model_for, snn_train_mesh,
+                                    snn_train_trace_count, train_snn_model)

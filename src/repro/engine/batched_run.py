@@ -240,6 +240,29 @@ def _forward(packed: PackedModel, spikes: jax.Array,
     return _forward_impl(packed, spikes, max_events)
 
 
+@functools.partial(jax.jit, static_argnames=("max_events",),
+                   donate_argnums=(1,))
+def _forward_donated(packed: PackedModel, spikes: jax.Array,
+                     max_events: int | None) -> list[jax.Array]:
+    """`_forward` with the input spike buffer donated back to the
+    allocator: on accelerator backends the padded bucket buffer a serving
+    dispatch uploads is recycled into the outputs instead of surviving the
+    call — so back-to-back dispatches of the same bucket never accumulate
+    input copies.  A separate jit entry (donation is a property of the
+    compiled executable, not the call), chosen by ``run_batched(donate=)``;
+    CPU XLA implements no donation, so the single-device default stays off
+    there."""
+    _bump_trace()
+    return _forward_impl(packed, spikes, max_events)
+
+
+def should_donate(donate: bool | None) -> bool:
+    """Resolve a ``donate`` tri-state: ``None`` means "on unless the
+    backend is CPU" — the shared default of ``run_batched``,
+    ``run_sharded``, and the serving front ends."""
+    return jax.default_backend() != "cpu" if donate is None else donate
+
+
 # ------------------------------------------------------------ batched result
 
 @dataclasses.dataclass
@@ -360,7 +383,8 @@ def _finalize(packed: PackedModel, in_spikes: np.ndarray,
 def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,
                 *, max_events: int | None = None,
                 sn_capacity_rows: int | None = None,
-                with_stats: bool = True) -> BatchedRunResult:
+                with_stats: bool = True,
+                donate: bool | None = None) -> BatchedRunResult:
     """Execute a batch of spike trains ``[B, T, n_in]`` through the chain.
 
     Bit-exact vs. the oracle ``run`` called with the same ``max_events``
@@ -374,12 +398,14 @@ def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,
     (empty stats arrays, no crash), ``T=1`` and all-silent batches follow
     the ordinary path.  ``with_stats=False`` skips the (host-side)
     accounting — the serving configuration, where only the output spikes
-    matter.
+    matter.  ``donate`` hands the uploaded spike buffer to the jit for
+    reuse (default: on unless the backend is CPU, which lacks donation).
     """
     packed = model if isinstance(model, PackedModel) else model.pack()
     spikes = jnp.asarray(np.asarray(in_spikes, dtype=np.float32))
     assert spikes.ndim == 3 and spikes.shape[2] == packed.n_in, \
         f"expected [B, T, {packed.n_in}], got {spikes.shape}"
-    layer_outs = _forward(packed, spikes, max_events)
+    fwd = _forward_donated if should_donate(donate) else _forward
+    layer_outs = fwd(packed, spikes, max_events)
     return _finalize(packed, np.asarray(in_spikes, dtype=np.float32),
                      layer_outs, max_events, sn_capacity_rows, with_stats)

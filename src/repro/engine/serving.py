@@ -230,7 +230,8 @@ TELEMETRY_KEYS = ("b_pad", "t_pad", "n_requests", "events", "out_spikes",
 def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
                  mesh=None, max_events: int | None = None,
                  sn_capacity_rows: int | None = None,
-                 with_stats: bool = True
+                 with_stats: bool = True,
+                 donate: bool | None = None
                  ) -> tuple[list[RequestResult], dict]:
     """One engine call: zero-pad ``plan``'s requests into the plan's
     ``(b_pad, t_pad)`` bucket, run (sharded when ``mesh`` is given), and
@@ -241,6 +242,9 @@ def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
     (:mod:`repro.engine.stream_server`) — batch formation policy differs,
     what happens to a formed batch cannot.  Returns the per-request results
     (aligned with ``plan.indices``) and one ``TELEMETRY_KEYS`` record.
+    ``donate`` recycles the padded upload buffer into the engine call
+    (default: on unless the backend is CPU) — back-to-back dispatches of
+    the same bucket then reuse one allocation instead of piling up copies.
     """
     padded = np.zeros((plan.b_pad, plan.t_pad, packed.n_in),
                       dtype=np.float32)
@@ -250,11 +254,11 @@ def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
     if mesh is None:
         res = br.run_batched(packed, padded, max_events=max_events,
                              sn_capacity_rows=sn_capacity_rows,
-                             with_stats=with_stats)
+                             with_stats=with_stats, donate=donate)
     else:
         res = run_sharded(packed, padded, mesh=mesh, max_events=max_events,
                           sn_capacity_rows=sn_capacity_rows,
-                          with_stats=with_stats)
+                          with_stats=with_stats, donate=donate)
     dt = time.perf_counter() - t0
     record = {
         "b_pad": plan.b_pad, "t_pad": plan.t_pad,
@@ -274,7 +278,8 @@ def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
                  sn_capacity_rows: int | None = None,
                  with_stats: bool = True,
                  telemetry: list | None = None,
-                 overlong: str = "error") -> list[RequestResult]:
+                 overlong: str = "error",
+                 donate: bool | None = None) -> list[RequestResult]:
     """Serve a list of variable-length spike streams (``[T_i, n_in]`` each)
     through the bucketed engine; results come back in request order.
 
@@ -319,7 +324,7 @@ def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
         reqs, record = execute_plan(packed, streams, plan, mesh=mesh,
                                     max_events=max_events,
                                     sn_capacity_rows=sn_capacity_rows,
-                                    with_stats=with_stats)
+                                    with_stats=with_stats, donate=donate)
         if telemetry is not None:
             telemetry.append(record)
         for row, i in enumerate(plan.indices):

@@ -121,9 +121,7 @@ def run_sharded(model, in_spikes: np.ndarray, *,
                               with_stats=with_stats)
     mesh = snn_serve_mesh() if mesh is None else mesh
     spec = batch_spec(mesh, spikes_np.shape)
-    if donate is None:
-        donate = jax.default_backend() != "cpu"
-    fwd = _sharded_forward(mesh, spec, donate)
+    fwd = _sharded_forward(mesh, spec, br.should_donate(donate))
     layer_outs = fwd(packed, jnp.asarray(spikes_np), max_events)
     return br._finalize(packed, spikes_np, layer_outs, max_events,
                         sn_capacity_rows, with_stats)

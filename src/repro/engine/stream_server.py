@@ -199,7 +199,8 @@ class StreamServer:
                  service_model=None,
                  max_events: int | None = None,
                  sn_capacity_rows: int | None = None,
-                 with_stats: bool = False):
+                 with_stats: bool = False,
+                 donate: bool | None = None):
         assert backpressure in ("reject", "shed_oldest"), backpressure
         assert overlong in ("reject", "extend"), overlong
         assert queue_capacity > 0
@@ -222,6 +223,11 @@ class StreamServer:
         self.max_events = max_events
         self.sn_capacity_rows = sn_capacity_rows
         self.with_stats = with_stats
+        # each dispatch uploads one padded bucket buffer; donating it lets
+        # the jit recycle that allocation into the outputs, so an always-on
+        # server never accumulates input copies across dispatches.  CPU XLA
+        # has no donation, hence the backend-aware default.
+        self.donate = br.should_donate(donate)
         self.metrics = ServerMetrics()
         # execute_plan records / rejection log, last METRICS_WINDOW entries
         self.telemetry: collections.deque = \
@@ -401,7 +407,7 @@ class StreamServer:
             self.packed, [r.stream for r in reqs], plan, mesh=self.mesh,
             max_events=self.max_events,
             sn_capacity_rows=self.sn_capacity_rows,
-            with_stats=self.with_stats)
+            with_stats=self.with_stats, donate=self.donate)
         self.telemetry.append(record)
         key = (b_pad, t_pad)
         prev = self._ewma.get(key)

@@ -55,7 +55,7 @@ class TrainState:
 class TrainLoopConfig:
     steps: int = 100
     checkpoint_every: int = 50
-    checkpoint_dir: str = "/tmp/repro_ckpt"
+    checkpoint_dir: str | None = "/tmp/repro_ckpt"   # None: no checkpoints
     log_every: int = 10
     straggler_factor: float = 3.0
     keep_checkpoints: int = 3
@@ -131,7 +131,8 @@ def train_loop(state_tree: dict, step_fn, batch_fn, cfg: TrainLoopConfig,
 
     Returns (final state, history dict).
     """
-    mgr = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
+    mgr = (CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints)
+           if cfg.checkpoint_dir else None)   # None: ephemeral, no ckpt I/O
     history = {"loss": [], "step_time": [], "stragglers": 0,
                "checkpoints": []}
     durations: list[float] = []
@@ -153,15 +154,22 @@ def train_loop(state_tree: dict, step_fn, batch_fn, cfg: TrainLoopConfig,
                        f"median {med*1e3:.1f}ms")
             history["loss"].append(loss)
             history["step_time"].append(dt)
+            for k, v in metrics.items():
+                # record any extra scalar metric (acc, grad_norm, lr, ...)
+                if k == "loss" or getattr(v, "ndim", 0) != 0:
+                    continue
+                history.setdefault(k, []).append(float(v))
             step += 1
-            if step % cfg.checkpoint_every == 0 or step == cfg.steps:
+            if mgr is not None and (step % cfg.checkpoint_every == 0
+                                    or step == cfg.steps):
                 mgr.save_async(step, state_tree, extra={"loss": loss})
                 history["checkpoints"].append(step)
             if step % cfg.log_every == 0:
                 log_fn(f"step {step}: loss={loss:.4f} "
                        f"({dt*1e3:.0f} ms/step)")
     finally:
-        mgr.wait()
+        if mgr is not None:
+            mgr.wait()
     return state_tree, history
 
 

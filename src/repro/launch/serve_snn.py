@@ -119,7 +119,7 @@ def synth_arrival_trace(n: int, n_in: int, *, mode: str = "poisson",
 def serve_async(model, trace, *, policy: BucketPolicy, mesh,
                 queue_capacity: int = 256, backpressure: str = "reject",
                 service_model=None, max_events: int | None = None,
-                with_stats: bool = False):
+                with_stats: bool = False, donate: bool | None = None):
     """One async serving pass over an arrival trace (virtual clock);
     returns ``(results, rids, metrics)``.  ``metrics`` is the
     ``ServerMetrics`` snapshot plus the trajectory numbers
@@ -130,7 +130,8 @@ def serve_async(model, trace, *, policy: BucketPolicy, mesh,
                           queue_capacity=queue_capacity,
                           backpressure=backpressure,
                           service_model=service_model,
-                          max_events=max_events, with_stats=with_stats)
+                          max_events=max_events, with_stats=with_stats,
+                          donate=donate)
     n0 = trace_count()
     t0 = time.perf_counter()
     results, rids = serve_trace(server, trace)
@@ -202,7 +203,11 @@ def main():
                     help="per-request deadline slack, seconds after arrival")
     ap.add_argument("--queue-capacity", type=int, default=256,
                     help="async arrival-queue bound (backpressure kicks in)")
+    ap.add_argument("--donate", default="auto", choices=["auto", "on", "off"],
+                    help="donate the padded bucket buffer to each engine "
+                         "call (auto: on unless the backend is CPU)")
     args = ap.parse_args()
+    donate = None if args.donate == "auto" else args.donate == "on"
     assert_spoof_applied(_SPOOFED)
 
     mesh = snn_serve_mesh(args.data)
@@ -227,11 +232,13 @@ def main():
             svc = lambda b, t: 0.0  # noqa: E731
             serve_async(packed, trace, policy=policy, mesh=mesh,
                         queue_capacity=args.queue_capacity,
-                        service_model=svc, max_events=args.max_events)
+                        service_model=svc, max_events=args.max_events,
+                        donate=donate)
             results, rids, m = serve_async(
                 packed, trace, policy=policy, mesh=mesh,
                 queue_capacity=args.queue_capacity,
-                service_model=svc, max_events=args.max_events)
+                service_model=svc, max_events=args.max_events,
+                donate=donate)
             assert m["new_traces"] == 0, "hot async pass retraced the jit!"
             preds = [int(results[r].out_spikes.sum(axis=0).argmax())
                      for r in rids[:8] if r is not None and r in results]

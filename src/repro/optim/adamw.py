@@ -32,9 +32,9 @@ def adamw_init(params):
     }
 
 
-def _schedule(cfg: AdamWConfig, step):
+def _schedule(cfg: AdamWConfig, step, base_lr=None):
     warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
-    return cfg.lr * warm
+    return (cfg.lr if base_lr is None else base_lr) * warm
 
 
 def global_norm(tree) -> jax.Array:
@@ -42,13 +42,20 @@ def global_norm(tree) -> jax.Array:
                         for g in jax.tree.leaves(tree)))
 
 
-def adamw_update(cfg: AdamWConfig, params, opt_state, grads):
-    """Returns (new_params, new_opt_state, metrics)."""
+def adamw_update(cfg: AdamWConfig, params, opt_state, grads, *, lr=None):
+    """Returns (new_params, new_opt_state, metrics).
+
+    ``lr``, when given, is a *dynamic* scalar overriding ``cfg.lr`` as the
+    schedule's base rate (the warmup ramp still applies).  Because it is a
+    traced value rather than a static config field, an external LR schedule
+    feeds a new rate every step without retracing the jitted train step —
+    the fix for the retrace-per-lr bug the old SNN Adam loops had.
+    """
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
     grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
     step = opt_state["step"] + 1
-    lr = _schedule(cfg, step)
+    lr = _schedule(cfg, step, lr)
     b1, b2 = cfg.b1, cfg.b2
     m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, opt_state["m"], grads)
     v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g,

@@ -70,6 +70,20 @@ SNN_SERVE_RULES: AxisMap = {
     "neuron": None,
 }
 
+# MENAGE sharded DP training (engine/snn_train.py): the spike batch shards
+# over the same data axes as serving, while params and optimizer state stay
+# replicated on every device (the evaluation models are tiny next to the
+# transformer stack, so FSDP buys nothing) and per-shard gradients combine
+# with a fixed-order fold — a deterministic psum that keeps the training
+# trajectory bit-exact across mesh sizes.  The training layout is time-major
+# ``[T, B, n_in]`` (the lax.scan axis first), hence event_time leads.
+SNN_TRAIN_RULES: AxisMap = {
+    "event_batch": ("pod", "data"),
+    "event_time": None,
+    "neuron": None,
+    "snn_weight": None,     # params + Adam moments replicated
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class ShardingRules:

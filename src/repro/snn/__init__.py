@@ -1,3 +1,4 @@
-from repro.snn.mlp import SNNConfig, init_snn, snn_forward, snn_loss, train_snn  # noqa: F401
-from repro.snn.conv import (ConvSNNConfig, conv_snn_forward, conv_snn_loss,  # noqa: F401
-                            init_conv_snn, layer_specs, train_conv_snn)
+from repro.snn.mlp import (SNNConfig, init_snn, snn_forward,  # noqa: F401
+                           snn_forward_batch_major, snn_loss)
+from repro.snn.conv import (ConvSNNConfig, conv_snn_forward,  # noqa: F401
+                            conv_snn_loss, init_conv_snn, layer_specs)

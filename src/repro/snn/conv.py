@@ -9,7 +9,8 @@ hardware structure exactly so a trained model lowers faithfully.
 
 Training shares the MLP machinery: the same ``lif_step`` surrogate-gradient
 cell (:mod:`repro.core.lif`), the same rate decoding (spike counts are the
-logits), the same Adam loop.  Feature maps are NCHW and flatten
+logits), the same unified engine loop (:mod:`repro.engine.snn_train`).
+Feature maps are NCHW and flatten
 channel-major — the index convention of :mod:`repro.core.layers`, so
 ``layer_specs`` hands ``map_model`` a ``[Conv2d, SumPool2d(Conv2d), ...,
 Dense]`` stack with no permutation glue.
@@ -18,7 +19,6 @@ Dense]`` stack with no permutation glue.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -192,37 +192,7 @@ def conv_snn_loss(params, spikes, labels, cfg: ConvSNNConfig):
     return loss, acc
 
 
-@partial(jax.jit, static_argnames=("cfg", "lr"))
-def _train_step(params, opt_state, spikes, labels, cfg: ConvSNNConfig,
-                lr: float):
-    (loss, acc), grads = jax.value_and_grad(conv_snn_loss, has_aux=True)(
-        params, spikes, labels, cfg)
-    m, v, t = opt_state
-    t = t + 1
-    b1, b2, eps = 0.9, 0.999, 1e-8
-    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
-    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
-    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
-    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
-    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
-                          params, mh, vh)
-    return params, (m, v, t), loss, acc
-
-
-def train_conv_snn(key: jax.Array, cfg: ConvSNNConfig, data_iter, steps: int,
-                   lr: float = 1e-3, log_every: int = 50, params=None):
-    """Adam surrogate-gradient training (paper Table I hyperparameters);
-    ``data_iter`` yields time-major ``(spikes [T, B, n_in], labels [B])``."""
-    if params is None:
-        params = init_conv_snn(key, cfg)
-    m = jax.tree.map(jnp.zeros_like, params)
-    v = jax.tree.map(jnp.zeros_like, params)
-    opt_state = (m, v, jnp.zeros((), jnp.int32))
-    history = []
-    for step in range(steps):
-        spikes, labels = next(data_iter)
-        params, opt_state, loss, acc = _train_step(
-            params, opt_state, spikes, labels, cfg, lr)
-        if step % log_every == 0 or step == steps - 1:
-            history.append((step, float(loss), float(acc)))
-    return params, history
+# Training lives in the unified engine path: repro.engine.snn_train
+# (train_snn_model with CONV_MODEL / model_for(cfg)) — sharded DP, dynamic
+# lr, checkpoint/elastic/straggler machinery.  This module only defines the
+# model: init / forward / loss / layer_specs.

@@ -11,7 +11,6 @@ Time-major spike inputs ``[T, B, n_in]``; `lax.scan` over T.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -82,36 +81,7 @@ def snn_loss(params, spikes, labels, cfg: SNNConfig):
     return loss, acc
 
 
-@partial(jax.jit, static_argnames=("cfg", "lr"))
-def _train_step(params, opt_state, spikes, labels, cfg: SNNConfig, lr: float):
-    (loss, acc), grads = jax.value_and_grad(snn_loss, has_aux=True)(
-        params, spikes, labels, cfg)
-    # Adam
-    m, v, t = opt_state
-    t = t + 1
-    b1, b2, eps = 0.9, 0.999, 1e-8
-    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
-    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
-    mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
-    vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
-    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
-                          params, mh, vh)
-    return params, (m, v, t), loss, acc
-
-
-def train_snn(key: jax.Array, cfg: SNNConfig, data_iter, steps: int,
-              lr: float = 1e-3, log_every: int = 50, params=None):
-    """Train with the paper's lr=1e-3 Adam.  data_iter yields (spikes, labels)."""
-    if params is None:
-        params = init_snn(key, cfg)
-    m = jax.tree.map(jnp.zeros_like, params)
-    v = jax.tree.map(jnp.zeros_like, params)
-    opt_state = (m, v, jnp.zeros((), jnp.int32))
-    history = []
-    for step in range(steps):
-        spikes, labels = next(data_iter)
-        params, opt_state, loss, acc = _train_step(
-            params, opt_state, spikes, labels, cfg, lr)
-        if step % log_every == 0 or step == steps - 1:
-            history.append((step, float(loss), float(acc)))
-    return params, history
+# Training lives in the unified engine path: repro.engine.snn_train
+# (train_snn_model with MLP_MODEL / model_for(cfg)) — sharded DP, dynamic
+# lr, checkpoint/elastic/straggler machinery.  This module only defines the
+# model: init / forward / loss.

@@ -19,9 +19,10 @@ from repro.core.lif import LIFParams
 from repro.core.prune import prune_pytree
 from repro.data.events import EventDatasetConfig, event_batches, \
     synthetic_event_dataset
+from repro.engine import CONV_MODEL, SNNTrainConfig, train_snn_model
 from repro.engine import batched_run as br
 from repro.snn.conv import (ConvSNNConfig, conv_snn_forward, init_conv_snn,
-                            layer_specs, train_conv_snn)
+                            layer_specs)
 
 SPEC = AcceleratorSpec("test", n_cores=8, n_engines=4, n_caps=8,
                        weight_mem_bytes=1 << 16)
@@ -175,9 +176,10 @@ def test_trained_conv_model_bit_exact_batch():
     spikes, labels = synthetic_event_dataset(data, n_per_class=3, key=key)
     spikes = spikes[:, :cfg.num_steps]
     it = event_batches(spikes, labels, batch=8)
-    params, hist = train_conv_snn(jax.random.key(1), cfg, it, steps=6,
-                                  log_every=2)
-    assert np.isfinite(hist[-1][1])
+    params, hist = train_snn_model(
+        CONV_MODEL, cfg, it, SNNTrainConfig(steps=6, log_every=1000),
+        key=jax.random.key(1), log_fn=lambda s: None)
+    assert np.isfinite(hist["loss"][-1])
     pruned, _ = prune_pytree(params, 0.5)
     specs = layer_specs(pruned, cfg)
     assert sum(isinstance(s, Conv2d) for s in specs) >= 2

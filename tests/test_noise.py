@@ -26,14 +26,17 @@ def test_snn_accuracy_degrades_gracefully(rng):
     """C2C gain error <= 2% costs little accuracy; 50% destroys it —
     the qualitative robustness story for the analog path."""
     from repro.data.events import EventDatasetConfig, event_batches, synthetic_event_dataset
-    from repro.snn.mlp import SNNConfig, snn_forward, train_snn
+    from repro.engine import MLP_MODEL, SNNTrainConfig, train_snn_model
+    from repro.snn.mlp import SNNConfig, snn_forward
 
     cfg_d = EventDatasetConfig("noise", 8, 8, num_steps=12, base_rate=0.02,
                                signal_rate=0.5)
     snn = SNNConfig(layer_sizes=(cfg_d.n_in, 32, 10), num_steps=12)
     spikes, labels = synthetic_event_dataset(cfg_d, 12, jax.random.key(0))
-    params, _ = train_snn(jax.random.key(1), snn,
-                          event_batches(spikes, labels, 32), steps=120)
+    params, _ = train_snn_model(MLP_MODEL, snn,
+                                event_batches(spikes, labels, 32),
+                                SNNTrainConfig(steps=120, log_every=1000),
+                                key=jax.random.key(1), log_fn=lambda s: None)
 
     def acc(p):
         counts, _ = snn_forward(p, jnp.asarray(spikes.swapaxes(0, 1)), snn)

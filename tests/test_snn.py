@@ -13,7 +13,8 @@ from repro.core.lif import LIFParams
 from repro.core.prune import prune_pytree, sparsity
 from repro.core.quant import quantize_pytree
 from repro.data.events import EventDatasetConfig, event_batches, synthetic_event_dataset
-from repro.snn.mlp import SNNConfig, init_snn, snn_forward, train_snn
+from repro.engine import MLP_MODEL, SNNTrainConfig, train_snn_model
+from repro.snn.mlp import SNNConfig, init_snn, snn_forward
 
 
 @pytest.fixture(scope="module")
@@ -24,7 +25,10 @@ def trained():
                                              key=jax.random.key(0))
     snn = SNNConfig(layer_sizes=(cfg_d.n_in, 48, 24, 10), num_steps=15)
     it = event_batches(spikes, labels, batch=32)
-    params, hist = train_snn(jax.random.key(1), snn, it, steps=150, lr=2e-3)
+    params, hist = train_snn_model(
+        MLP_MODEL, snn, it, SNNTrainConfig(steps=150, lr=2e-3,
+                                           log_every=1000),
+        key=jax.random.key(1), log_fn=lambda s: None)
     return cfg_d, snn, params, (spikes, labels)
 
 

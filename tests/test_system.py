@@ -32,14 +32,17 @@ from repro.core.energy import AcceleratorSpec
 from repro.core.prune import prune_pytree
 from repro.core.quant import quantize_pytree
 from repro.data.events import EventDatasetConfig, event_batches, synthetic_event_dataset
-from repro.snn.mlp import SNNConfig, train_snn
+from repro.engine import MLP_MODEL, SNNTrainConfig, train_snn_model
+from repro.snn.mlp import SNNConfig
 
 data_cfg = EventDatasetConfig("sys", 10, 10, num_steps=12, base_rate=0.02,
                               signal_rate=0.5)
 snn = SNNConfig(layer_sizes=(data_cfg.n_in, 32, 10), num_steps=12)
 spikes, labels = synthetic_event_dataset(data_cfg, 8, jax.random.key(0))
-params, _ = train_snn(jax.random.key(1), snn,
-                      event_batches(spikes, labels, 16), steps=60)
+params, _ = train_snn_model(MLP_MODEL, snn,
+                            event_batches(spikes, labels, 16),
+                            SNNTrainConfig(steps=60, log_every=1000),
+                            key=jax.random.key(1), log_fn=lambda s: None)
 pruned, _ = prune_pytree(params, 0.5)
 _, dq = quantize_pytree(pruned)
 spec = AcceleratorSpec("sys", 2, 4, 16, 1 << 20)
