@@ -3,6 +3,21 @@
 The silicon has op-amp offsets, capacitor mismatch and C2C ladder element
 variation; we model them as optional stochastic perturbations so accuracy
 sensitivity can be studied without circuit simulation.
+
+Two injection points:
+
+  * **Training-side** (`perturb_weights` / `perturb_membrane` /
+    `perturb_beta`): perturb the float training parameters to study
+    robustness of the learned model.
+  * **Serving-side** (`perturb_packed`): perturb the *effective* synaptic
+    weights of an already-packed engine model — the replayed A-SYN SRAM
+    content — modelling one physical chip's static C2C-ladder mismatch.
+    The perturbation is deterministic in the key (per-layer/round subkeys
+    via ``fold_in``), so a given ``(key, sigma)`` names one reproducible
+    "device instance": serving it twice is bit-identical, which is what
+    lets accuracy-under-noise be a tracked serving metric rather than a
+    flaky estimate (cf. the memristive analog-neuron literature, arXiv
+    2509.04960: noise belongs in the serving measurement loop).
 """
 
 from __future__ import annotations
@@ -37,3 +52,46 @@ def perturb_beta(key: jax.Array, beta: float, shape, noise: AnalogNoise) -> jax.
     if noise.leak_mismatch <= 0:
         return b
     return jnp.clip(b * (1.0 + noise.leak_mismatch * jax.random.normal(key, shape)), 0.0, 1.0)
+
+
+def as_noise_key(key) -> jax.Array:
+    """Coerce an int seed to a jax PRNG key (keys pass through) — the
+    convenience the serving entry points use so operators can write
+    ``noise_seed=0`` instead of importing jax.random."""
+    return jax.random.key(key) if isinstance(key, int) else key
+
+
+def perturb_packed(key: jax.Array, packed, noise: AnalogNoise):
+    """One noisy device instance of a packed engine model.
+
+    Applies the relative C2C-ladder gain error (``weight_sigma``) to every
+    round's effective weights — dense replay tiles and COO synapse values
+    alike — and returns a new :class:`repro.engine.batched_run.PackedModel`
+    sharing the untouched control-memory tables.  Zeros stay exactly zero
+    (multiplicative noise: an absent synapse has no ladder to mismatch), so
+    event-driven sparsity is preserved.
+
+    Deterministic: subkeys are ``fold_in``-derived from the (layer, round)
+    position, so the same ``(key, noise)`` always yields the bit-identical
+    perturbed model regardless of call order — the anchor for the
+    serving-time accuracy-under-noise metric (tests/test_noise.py).
+    ``weight_sigma <= 0`` returns ``packed`` unchanged (identity, same
+    object — no new jit cache entries from a no-op perturbation).
+    """
+    import dataclasses as _dc
+
+    if noise.weight_sigma <= 0:
+        return packed
+    layers = []
+    for li, layer in enumerate(packed.layers):
+        rounds = []
+        for ri, rnd in enumerate(layer.rounds):
+            k = jax.random.fold_in(jax.random.fold_in(key, li), ri)
+            if rnd.w_dense is not None:
+                rounds.append(_dc.replace(
+                    rnd, w_dense=perturb_weights(k, rnd.w_dense, noise)))
+            else:
+                rounds.append(_dc.replace(
+                    rnd, coo_val=perturb_weights(k, rnd.coo_val, noise)))
+        layers.append(_dc.replace(layer, rounds=rounds))
+    return _dc.replace(packed, layers=layers)

@@ -5,10 +5,15 @@ from repro.engine.batched_run import (BatchedDispatchStats, BatchedRunResult,  #
 from repro.engine.serving import (BucketPolicy, OverlongRequestError,  # noqa: F401
                                   RequestResult, TELEMETRY_KEYS,
                                   execute_plan, plan_batches, run_bucketed)
-from repro.engine.sharded_run import run_sharded, snn_serve_mesh  # noqa: F401
+from repro.engine.sharded_run import (DeviceLossError, run_sharded,  # noqa: F401
+                                      shrink_mesh, snn_serve_mesh)
 from repro.engine.stream_server import (METRIC_KEYS, Rejection,  # noqa: F401
-                                        Request, ServerMetrics, StreamServer,
-                                        VirtualClock, WallClock, serve_trace)
+                                        Request, SLOPolicy, ServerMetrics,
+                                        StreamServer, VirtualClock, WallClock,
+                                        serve_trace)
+from repro.engine.chaos import (ARRIVAL_MODES, ChaosScenario,  # noqa: F401
+                                SCENARIOS, make_chaos_hook, run_scenario,
+                                synth_arrival_trace)
 from repro.engine.train_loop import TrainLoopConfig, TrainState, make_train_step, train_loop  # noqa: F401
 from repro.engine.snn_train import (CONV_MODEL, MLP_MODEL, SNNModel,  # noqa: F401
                                     SNNTrainConfig, make_snn_train_step,

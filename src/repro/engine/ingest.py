@@ -1,0 +1,167 @@
+"""Length-prefixed wire protocol for live spike-stream ingest.
+
+The socket front end (:mod:`repro.launch.socket_serve`) feeds
+:class:`~repro.engine.stream_server.StreamServer` from real connections;
+this module is the framing both ends speak.  It is deliberately socket-free
+— pure ``bytes -> frames`` — so the tier-1 suite exercises every byte of
+the protocol without opening a port, and any transport (TCP, Unix socket,
+serial link from the sensor) can carry it.
+
+Frame layout (network byte order)::
+
+    +----+----+---------+---------+====================+
+    |'M' |'G' | ver u8  | kind u8 | len u32 | payload  |
+    +----+----+---------+---------+====================+
+
+Kinds:
+
+  * ``REQUEST`` — ``req_id u32, T u32, n_in u32, slack f64`` followed by
+    the ``[T, n_in]`` 0/1 spike raster **bit-packed** (``np.packbits``):
+    an event-driven edge link ships 1 bit per (step, neuron), 8x smaller
+    than float32 and exactly round-trippable since spikes are binary.
+    ``slack`` is the per-request deadline slack in seconds (``inf`` =
+    best-effort), mapping 1:1 onto ``StreamServer.submit(slack=...)``.
+  * ``RESULT`` — ``req_id u32, T u32, n_out u32`` + bit-packed output
+    spikes: the request's bit-exact ``RequestResult.out_spikes``.
+  * ``REJECT`` — ``req_id u32`` + utf-8 reason (the server's
+    :class:`~repro.engine.stream_server.Rejection` reason/detail), so a
+    client always learns the fate of every request it sent.
+
+``req_id`` is client-chosen correlation state (the server echoes it back);
+it is unrelated to the server's internal rids.  :class:`FrameDecoder` is an
+incremental parser: feed it arbitrary chunk boundaries (as TCP delivers
+them) and complete frames come out.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import struct
+
+import numpy as np
+
+MAGIC = b"MG"
+VERSION = 1
+
+KIND_REQUEST = 0
+KIND_RESULT = 1
+KIND_REJECT = 2
+
+_HEADER = struct.Struct(">2sBBI")           # magic, version, kind, payload len
+_REQ_HEAD = struct.Struct(">IIId")          # req_id, T, n_in, slack
+_RES_HEAD = struct.Struct(">III")           # req_id, T, n_out
+_REJ_HEAD = struct.Struct(">I")             # req_id
+
+# A [T, n_in] raster at the largest serving bucket is a few KiB bit-packed;
+# anything near this bound is a corrupt length prefix, not a real request.
+MAX_PAYLOAD = 1 << 26
+
+
+class ProtocolError(ValueError):
+    """Corrupt or incompatible framing — the connection should be closed."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    kind: int
+    payload: bytes
+
+
+def _pack_bits(spikes: np.ndarray) -> bytes:
+    return np.packbits((np.asarray(spikes) > 0).astype(np.uint8),
+                       axis=None).tobytes()
+
+
+def _unpack_bits(buf: bytes, t: int, n: int) -> np.ndarray:
+    need = -(-t * n // 8)
+    if len(buf) != need:
+        raise ProtocolError(f"raster for [{t}, {n}] needs {need} bytes, "
+                            f"got {len(buf)}")
+    bits = np.unpackbits(np.frombuffer(buf, dtype=np.uint8), count=t * n)
+    return bits.reshape(t, n).astype(np.float32)
+
+
+def _frame(kind: int, payload: bytes) -> bytes:
+    return _HEADER.pack(MAGIC, VERSION, kind, len(payload)) + payload
+
+
+def encode_request(req_id: int, stream: np.ndarray,
+                   slack: float = math.inf) -> bytes:
+    """One client request: a ``[T, n_in]`` spike raster plus its deadline
+    slack, bit-packed into a single frame."""
+    stream = np.asarray(stream)
+    assert stream.ndim == 2, f"expected [T, n_in], got {stream.shape}"
+    t, n_in = stream.shape
+    return _frame(KIND_REQUEST,
+                  _REQ_HEAD.pack(req_id, t, n_in, float(slack))
+                  + _pack_bits(stream))
+
+
+def decode_request(payload: bytes) -> tuple[int, np.ndarray, float]:
+    if len(payload) < _REQ_HEAD.size:
+        raise ProtocolError(f"request payload truncated at {len(payload)}B")
+    req_id, t, n_in, slack = _REQ_HEAD.unpack_from(payload)
+    return req_id, _unpack_bits(payload[_REQ_HEAD.size:], t, n_in), slack
+
+
+def encode_result(req_id: int, out_spikes: np.ndarray) -> bytes:
+    out = np.asarray(out_spikes)
+    assert out.ndim == 2, f"expected [T, n_out], got {out.shape}"
+    t, n_out = out.shape
+    return _frame(KIND_RESULT,
+                  _RES_HEAD.pack(req_id, t, n_out) + _pack_bits(out))
+
+
+def decode_result(payload: bytes) -> tuple[int, np.ndarray]:
+    if len(payload) < _RES_HEAD.size:
+        raise ProtocolError(f"result payload truncated at {len(payload)}B")
+    req_id, t, n_out = _RES_HEAD.unpack_from(payload)
+    return req_id, _unpack_bits(payload[_RES_HEAD.size:], t, n_out)
+
+
+def encode_rejection(req_id: int, reason: str) -> bytes:
+    return _frame(KIND_REJECT, _REJ_HEAD.pack(req_id) + reason.encode())
+
+
+def decode_rejection(payload: bytes) -> tuple[int, str]:
+    if len(payload) < _REJ_HEAD.size:
+        raise ProtocolError(f"reject payload truncated at {len(payload)}B")
+    (req_id,) = _REJ_HEAD.unpack_from(payload)
+    return req_id, payload[_REJ_HEAD.size:].decode()
+
+
+class FrameDecoder:
+    """Incremental frame parser over an arbitrary byte stream.
+
+    ``feed(chunk)`` buffers and returns every frame completed by that
+    chunk (possibly none, possibly several) — chunk boundaries are
+    whatever the transport delivered.  Corrupt magic, an unknown version,
+    or an absurd length prefix raise :class:`ProtocolError`; the caller
+    should drop the connection (there is no way to resynchronize a
+    length-prefixed stream after corruption)."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+    def feed(self, chunk: bytes) -> list[Frame]:
+        self._buf.extend(chunk)
+        frames: list[Frame] = []
+        while len(self._buf) >= _HEADER.size:
+            magic, ver, kind, length = _HEADER.unpack_from(self._buf)
+            if magic != MAGIC:
+                raise ProtocolError(f"bad magic {magic!r}")
+            if ver != VERSION:
+                raise ProtocolError(f"protocol version {ver}, want {VERSION}")
+            if length > MAX_PAYLOAD:
+                raise ProtocolError(f"frame length {length} > {MAX_PAYLOAD}")
+            if len(self._buf) < _HEADER.size + length:
+                break
+            payload = bytes(self._buf[_HEADER.size:_HEADER.size + length])
+            del self._buf[:_HEADER.size + length]
+            frames.append(Frame(kind=kind, payload=payload))
+        return frames

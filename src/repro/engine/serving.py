@@ -279,7 +279,8 @@ def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
                  with_stats: bool = True,
                  telemetry: list | None = None,
                  overlong: str = "error",
-                 donate: bool | None = None) -> list[RequestResult]:
+                 donate: bool | None = None,
+                 noise=None, noise_key=0) -> list[RequestResult]:
     """Serve a list of variable-length spike streams (``[T_i, n_in]`` each)
     through the bucketed engine; results come back in request order.
 
@@ -295,9 +296,20 @@ def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
     raises :class:`OverlongRequestError` naming every offending request;
     ``"extend"`` grows the grid geometrically (new traces, logged) so the
     rest of the batch is unaffected.
+
+    ``noise`` (an :class:`repro.core.noise.AnalogNoise`) serves the batch
+    through one deterministic noisy device instance:
+    :func:`repro.core.noise.perturb_packed` applies the C2C-ladder gain
+    error to the replayed effective weights under ``noise_key`` (an int
+    seed or jax PRNG key) before any dispatch.  The same ``(noise,
+    noise_key)`` is bit-reproducible — the unit-level anchor for the soak
+    harness's accuracy-under-noise metric (tests/test_noise.py).
     """
     assert overlong in ("error", "extend"), overlong
     packed = model if isinstance(model, br.PackedModel) else model.pack()
+    if noise is not None:
+        from repro.core.noise import as_noise_key, perturb_packed
+        packed = perturb_packed(as_noise_key(noise_key), packed, noise)
     streams = [np.asarray(s, dtype=np.float32) for s in streams]
     for i, s in enumerate(streams):
         assert s.ndim == 2 and s.shape[1] == packed.n_in, \

@@ -51,6 +51,37 @@ def snn_serve_mesh(n_data: int | None = None) -> Mesh:
     return jax.make_mesh((n,), ("data",))
 
 
+class DeviceLossError(RuntimeError):
+    """Devices dropped out mid-serving.  Raised by hardware watchdogs in
+    production and by chaos hooks in the soak harness
+    (:mod:`repro.engine.chaos`); :class:`repro.engine.stream_server
+    .StreamServer` catches it at the dispatch boundary and recovers onto
+    the shrunken mesh — the serving-side twin of the train loop's elastic
+    restart (checkpoints are sharding-agnostic there; here the replicated
+    control memories are, so recovery is re-placement, not reload)."""
+
+    def __init__(self, n_lost: int = 1, detail: str = ""):
+        self.n_lost = int(n_lost)
+        msg = f"lost {self.n_lost} device(s) mid-serving"
+        super().__init__(msg + (f": {detail}" if detail else ""))
+
+
+def shrink_mesh(mesh: Mesh, n_lost: int) -> Mesh:
+    """The serving mesh after ``n_lost`` devices drop: a fresh 1-D data
+    mesh over the surviving devices.  Because the :class:`PackedModel` is
+    replicated (every device holds the full control-memory chain), any
+    subset of survivors can serve — recovery needs no state movement, only
+    a re-shard of future batches.  Raises :class:`DeviceLossError` when no
+    device survives (nothing to recover onto)."""
+    assert len(mesh.axis_names) == 1, \
+        f"shrink_mesh handles 1-D serving meshes, got axes {mesh.axis_names}"
+    survivors = mesh.size - n_lost
+    if survivors < 1:
+        raise DeviceLossError(n_lost, f"all {mesh.size} devices lost")
+    devs = np.asarray(mesh.devices).reshape(-1)[:survivors]
+    return Mesh(devs, mesh.axis_names)
+
+
 def batch_spec(mesh: Mesh, shape: tuple[int, int, int]) -> PartitionSpec:
     """PartitionSpec for a ``[B, T, n_in]`` spike tensor under the SNN
     serving rules: batch over the mesh's data axes when divisible, else

@@ -28,6 +28,18 @@ front end for that stream:
   * **Metrics.**  :class:`ServerMetrics` tracks queue depth,
     time-to-first-dispatch, end-to-end latency percentiles, deadline-miss
     rate, and bucket fill ratio — the ``BENCH_async_serving.json`` surface.
+  * **Chaos-ready.**  Three production failure modes are first-class (the
+    soak harness, :mod:`repro.engine.chaos` / ``benchmarks/soak_bench.py``,
+    drives all of them): a ``chaos_hook`` may raise
+    :class:`~repro.engine.sharded_run.DeviceLossError` at any dispatch
+    boundary and the server recovers onto the shrunken mesh (elastic
+    serving — no request is lost to hardware loss); an :class:`SLOPolicy`
+    flips between extend-biased admission and shedding on the windowed
+    deadline-miss rate; and ``noise=AnalogNoise(...)`` serves through one
+    deterministic noisy device instance with periodic shadow probes
+    against the clean model (the ``noise_agreement`` accuracy-under-noise
+    metric).  Every scenario replays deterministically on a VirtualClock
+    (tests/test_chaos.py).
 
 Time is pluggable: the default :class:`WallClock` serves real traffic;
 :class:`VirtualClock` + :func:`serve_trace` replay a time-stamped arrival
@@ -49,6 +61,7 @@ import numpy as np
 from repro.engine import batched_run as br
 from repro.engine.serving import (BatchPlan, BucketPolicy, RequestResult,
                                   execute_plan)
+from repro.engine.sharded_run import DeviceLossError, shrink_mesh
 
 _log = logging.getLogger(__name__)
 
@@ -109,14 +122,16 @@ class Rejection:
 # instead of growing until OOM.  Counters are exact over the full lifetime.
 METRICS_WINDOW = 10_000
 
-# The ServerMetrics.snapshot() schema, locked by tests/test_serving.py so
-# dashboards reading BENCH_async_serving.json don't silently break.
+# The ServerMetrics.snapshot() schema, locked by tests/test_serving.py AND
+# by the docs/SERVING.md metrics table (tests/test_docs.py) so dashboards
+# reading BENCH_async_serving.json / BENCH_soak.json don't silently break.
 METRIC_KEYS = (
     "submitted", "admitted", "rejected", "shed", "completed",
     "deadline_misses", "deadline_miss_rate", "dispatches",
     "forced_dispatches", "policy_extensions", "queue_depth",
     "max_queue_depth", "bucket_fill_ratio", "p50_ttfd_s", "p99_ttfd_s",
-    "p50_latency_s", "p99_latency_s")
+    "p50_latency_s", "p99_latency_s", "device_losses", "slo_switches",
+    "slo_shedding", "noise_probes", "noise_agreement")
 
 
 @dataclasses.dataclass
@@ -141,6 +156,11 @@ class ServerMetrics:
     policy_extensions: int = 0
     queue_depth: int = 0
     max_queue_depth: int = 0
+    device_losses: int = 0          # chaos/watchdog-reported mesh shrinks
+    slo_switches: int = 0           # shed<->extend mode flips by the SLO loop
+    slo_shedding: bool = False      # currently in degraded (shedding) mode
+    noise_probes: int = 0           # requests shadow-checked vs clean model
+    noise_disagreements: int = 0    # probes whose prediction flipped
     ttfd_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=METRICS_WINDOW))
     latency_s: collections.deque = dataclasses.field(
@@ -173,12 +193,51 @@ class ServerMetrics:
             "p99_ttfd_s": self._pct(self.ttfd_s, 99),
             "p50_latency_s": self._pct(self.latency_s, 50),
             "p99_latency_s": self._pct(self.latency_s, 99),
+            "device_losses": self.device_losses,
+            "slo_switches": self.slo_switches,
+            "slo_shedding": int(self.slo_shedding),
+            "noise_probes": self.noise_probes,
+            # accuracy under analog noise: fraction of shadow-probed
+            # requests whose prediction matched the clean model (1.0 when
+            # probing is off — no evidence of degradation)
+            "noise_agreement": ((self.noise_probes - self.noise_disagreements)
+                                / self.noise_probes
+                                if self.noise_probes else 1.0),
         }
 
 
 # ------------------------------------------------------------------- server
 
 _EWMA_ALPHA = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOPolicy:
+    """SLO-driven shed-vs-extend switching for an always-on server.
+
+    The server normally runs *extend-biased*: whatever ``backpressure`` /
+    ``overlong`` it was built with (typically admit-everything).  When the
+    deadline-miss rate over the last ``window`` completed requests exceeds
+    ``target_miss_rate``, it flips to *shed* mode — ``backpressure=
+    "shed_oldest"`` (newest data wins; stale queued requests would miss
+    anyway) and ``overlong="reject"`` (no mid-overload grid growth, which
+    costs a jit trace at the worst possible moment).  Once the windowed
+    rate drops below ``restore_factor * target_miss_rate``, the original
+    policies are restored.  Mode flips are counted in the ``slo_switches``
+    metric and the current mode is exported as ``slo_shedding`` — the
+    measured, scenario-driven alternative to hand-tuning backpressure per
+    deployment (cf. the bottleneck-modeling argument of arXiv 2511.21549).
+    """
+
+    target_miss_rate: float = 0.05
+    window: int = 64
+    min_samples: int = 16          # don't flap on the first few requests
+    restore_factor: float = 0.5
+
+    def __post_init__(self):
+        assert 0.0 < self.target_miss_rate <= 1.0
+        assert 0.0 <= self.restore_factor < 1.0
+        assert 0 < self.min_samples <= self.window
 
 
 class StreamServer:
@@ -200,12 +259,38 @@ class StreamServer:
                  max_events: int | None = None,
                  sn_capacity_rows: int | None = None,
                  with_stats: bool = False,
-                 donate: bool | None = None):
+                 donate: bool | None = None,
+                 noise=None, noise_key=0, noise_probe_every: int = 8,
+                 slo: SLOPolicy | None = None,
+                 chaos_hook=None):
         assert backpressure in ("reject", "shed_oldest"), backpressure
         assert overlong in ("reject", "extend"), overlong
         assert queue_capacity > 0
+        assert noise_probe_every >= 0
         self.packed = (model if isinstance(model, br.PackedModel)
                        else model.pack())
+        # serving-time analog noise: serve every request through one
+        # deterministic noisy device instance (core/noise.perturb_packed);
+        # every noise_probe_every-th dispatch is shadow-replayed through
+        # the clean model to track prediction agreement (the
+        # accuracy-under-noise metric).  0 disables probing.
+        self._clean_packed = self.packed
+        self.noise = noise
+        if noise is not None and noise.weight_sigma > 0:
+            from repro.core.noise import as_noise_key, perturb_packed
+            self.packed = perturb_packed(as_noise_key(noise_key),
+                                         self.packed, noise)
+        self.noise_probe_every = noise_probe_every
+        # SLO controller state: the configured backpressure/overlong are the
+        # "extend-biased" baseline it restores to after a shed episode
+        self.slo = slo
+        self._slo_base = (backpressure, overlong)
+        self._slo_misses: collections.deque = collections.deque(
+            maxlen=slo.window if slo is not None else 1)
+        # chaos_hook(dispatch_ordinal) runs at every dispatch boundary and
+        # may raise DeviceLossError — the soak harness's failure injection,
+        # mirroring train_loop's failure_hook
+        self.chaos_hook = chaos_hook
         self.policy = policy
         self.mesh = mesh
         self.clock = clock if clock is not None else WallClock()
@@ -396,18 +481,92 @@ class StreamServer:
 
     # ------------------------------------------------------------ execution
 
+    def _recover_mesh(self, err: DeviceLossError) -> None:
+        """Elastic recovery at a dispatch boundary: shrink the serving mesh
+        to the survivors (the replicated PackedModel needs no state
+        movement), re-round the batch buckets to the new shard count
+        (time buckets — and hence every queued request's ``t_pad`` — are
+        preserved), and drop service-time estimates measured on the dead
+        topology.  The serving twin of the train loop's elastic restart."""
+        if self.mesh is None:
+            raise err   # no mesh to shrink — single-device loss is fatal
+        old = self.mesh.size
+        self.mesh = shrink_mesh(self.mesh, err.n_lost)   # raises if none left
+        self.policy = BucketPolicy.for_mesh(
+            self.mesh.size, batch_sizes=self.policy.batch_sizes,
+            time_steps=self.policy.time_steps)
+        self._ewma.clear()
+        self.metrics.device_losses += 1
+        _log.warning("stream_server: lost %d device(s) mid-serving; "
+                     "recovered %d -> %d-way mesh, batch buckets now %s "
+                     "(new jit traces)", err.n_lost, old, self.mesh.size,
+                     self.policy.batch_sizes)
+
+    def _execute(self, streams: list, plan: BatchPlan, packed=None):
+        return execute_plan(
+            self.packed if packed is None else packed, streams, plan,
+            mesh=self.mesh, max_events=self.max_events,
+            sn_capacity_rows=self.sn_capacity_rows,
+            with_stats=self.with_stats, donate=self.donate)
+
+    def _noise_probe(self, reqs, results, streams, plan: BatchPlan) -> None:
+        """Shadow-replay this dispatch through the clean (un-perturbed)
+        model and count per-request prediction flips — the serving-time
+        accuracy-under-noise signal.  Runs off the metrics clock (a
+        measurement, not service work): no telemetry record, no EWMA
+        update, no virtual-clock advance."""
+        clean, _ = self._execute(streams, plan, packed=self._clean_packed)
+        m = self.metrics
+        for res, ref in zip(results, clean):
+            noisy_pred = int(res.out_spikes.sum(axis=0).argmax())
+            clean_pred = int(ref.out_spikes.sum(axis=0).argmax())
+            m.noise_probes += 1
+            m.noise_disagreements += int(noisy_pred != clean_pred)
+
+    def _slo_update(self) -> None:
+        """Flip between extend-biased and shed mode on the windowed
+        deadline-miss rate (see :class:`SLOPolicy`)."""
+        if self.slo is None or len(self._slo_misses) < self.slo.min_samples:
+            return
+        rate = sum(self._slo_misses) / len(self._slo_misses)
+        m = self.metrics
+        if not m.slo_shedding and rate > self.slo.target_miss_rate:
+            m.slo_shedding = True
+            m.slo_switches += 1
+            self.backpressure, self.overlong = "shed_oldest", "reject"
+            _log.warning("stream_server: SLO breach (miss rate %.3f > "
+                         "%.3f over %d reqs) — shedding", rate,
+                         self.slo.target_miss_rate, len(self._slo_misses))
+        elif m.slo_shedding and \
+                rate < self.slo.restore_factor * self.slo.target_miss_rate:
+            m.slo_shedding = False
+            m.slo_switches += 1
+            self.backpressure, self.overlong = self._slo_base
+            _log.warning("stream_server: SLO recovered (miss rate %.3f) — "
+                         "restoring backpressure=%s overlong=%s", rate,
+                         *self._slo_base)
+
     def _dispatch(self, t_pad: int, k: int, forced: bool) -> None:
         q = self._pending[t_pad]
         reqs = [q.popleft() for _ in range(k)]
         self._n_pending -= k
-        b_pad = self.policy.b_bucket(k)
+        streams = [r.stream for r in reqs]
         dispatch_t = self.now()
-        plan = BatchPlan(indices=tuple(range(k)), b_pad=b_pad, t_pad=t_pad)
-        results, record = execute_plan(
-            self.packed, [r.stream for r in reqs], plan, mesh=self.mesh,
-            max_events=self.max_events,
-            sn_capacity_rows=self.sn_capacity_rows,
-            with_stats=self.with_stats, donate=self.donate)
+        # device loss surfaces at the dispatch boundary (from the chaos
+        # hook here; from the runtime's watchdog in production); recovery
+        # shrinks the mesh and retries the same requests — requests are
+        # only lost to explicit shedding, never to hardware loss
+        while True:
+            b_pad = self.policy.b_bucket(k)
+            plan = BatchPlan(indices=tuple(range(k)), b_pad=b_pad,
+                             t_pad=t_pad)
+            try:
+                if self.chaos_hook is not None:
+                    self.chaos_hook(self.metrics.dispatches)
+                results, record = self._execute(streams, plan)
+                break
+            except DeviceLossError as e:
+                self._recover_mesh(e)
         self.telemetry.append(record)
         key = (b_pad, t_pad)
         prev = self._ewma.get(key)
@@ -426,7 +585,13 @@ class StreamServer:
             m.completed += 1
             m.ttfd_s.append(dispatch_t - req.arrival_t)
             m.latency_s.append(end_t - req.arrival_t)
-            m.deadline_misses += int(end_t > req.deadline)
+            missed = end_t > req.deadline
+            m.deadline_misses += int(missed)
+            self._slo_misses.append(missed)
+        if (self.noise is not None and self.noise_probe_every
+                and m.dispatches % self.noise_probe_every == 0):
+            self._noise_probe(reqs, results, streams, plan)
+        self._slo_update()
 
 
 # ------------------------------------------------------------- trace driver

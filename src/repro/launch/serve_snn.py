@@ -3,7 +3,8 @@ data-parallel host mesh — closed-list or always-on async.
 
   PYTHONPATH=src python -m repro.launch.serve_snn --model both --requests 48 \
       [--data 2] [--spoof-devices 2] [--smoke] \
-      [--arrivals poisson|bursty --rate 200 --slack 0.25]
+      [--arrivals poisson|bursty|diurnal|adversarial --rate 200 --slack 0.25] \
+      [--noise-sigma 0.05] [--scenario blackout|all|...]
 
 Requests are variable-length spike trains; the front end
 (:mod:`repro.engine.serving`) pads them into the policy's fixed ``(B, T)``
@@ -12,12 +13,17 @@ bucket grid (bounded jit cache, verified via ``trace_count``) and
 the mesh — batch axis sharded, control memories replicated, input buffers
 donated between steps on accelerator backends.
 
-``--arrivals poisson|bursty`` switches from the closed-list ``run_bucketed``
-pass to the always-on loop (:mod:`repro.engine.stream_server`): a
-time-stamped arrival process (Poisson, or bursts with exponential gaps at
-the same mean offered load) replays through a :class:`StreamServer` on a
-virtual clock, with per-request deadlines (``--slack``) forcing partial
-bucket dispatches and a bounded arrival queue applying backpressure.
+``--arrivals poisson|bursty|diurnal|adversarial`` switches from the
+closed-list ``run_bucketed`` pass to the always-on loop
+(:mod:`repro.engine.stream_server`): a time-stamped arrival process
+(:func:`repro.engine.chaos.synth_arrival_trace`) replays through a
+:class:`StreamServer` on a virtual clock, with per-request deadlines
+(``--slack``) forcing partial bucket dispatches and a bounded arrival queue
+applying backpressure.  ``--noise-sigma`` serves through a deterministic
+noisy device instance (accuracy-under-noise shadow probes), and
+``--scenario NAME|all`` replays named chaos scripts from
+:data:`repro.engine.chaos.SCENARIOS` instead (device loss, SLO shedding,
+the combined blackout).
 
 ``--spoof-devices N`` emulates an N-device host on CPU (sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count`` before jax initializes;
@@ -41,9 +47,14 @@ from repro.core.accelerator import MappedModel, map_model  # noqa: E402
 from repro.core.energy import AcceleratorSpec  # noqa: E402
 from repro.core.layers import Conv2d, Dense, SumPool2d  # noqa: E402
 from repro.core.lif import LIFParams  # noqa: E402
+from repro.core.noise import AnalogNoise  # noqa: E402
 from repro.engine import (BucketPolicy, StreamServer,  # noqa: E402
                           VirtualClock, run_bucketed, serve_trace,
                           trace_count)
+# arrival synthesis lives with the chaos scenarios now; re-exported here so
+# existing imports (benchmarks/async_serving_bench.py) keep working
+from repro.engine.chaos import (ARRIVAL_MODES, SCENARIOS,  # noqa: E402,F401
+                                run_scenario, synth_arrival_trace)
 from repro.engine.sharded_run import snn_serve_mesh  # noqa: E402
 
 
@@ -86,40 +97,11 @@ def synth_requests(n: int, n_in: int, *, t_lo: int = 4, t_hi: int = 30,
             for t in lengths]
 
 
-def synth_arrival_trace(n: int, n_in: int, *, mode: str = "poisson",
-                        rate: float = 200.0, burst: int = 6,
-                        t_lo: int = 4, t_hi: int = 30,
-                        spike_p: float = 0.15, slack: float = 0.25,
-                        seed: int = 0) -> list[tuple[float, np.ndarray, float]]:
-    """A time-stamped arrival process for the async server: ``n`` requests
-    as ``(arrival_t, stream, deadline)`` tuples, non-decreasing in time.
-
-    ``poisson`` draws i.i.d. exponential interarrivals at ``rate`` req/s —
-    the memoryless baseline.  ``bursty`` emits back-to-back bursts of
-    ``burst`` simultaneous requests with exponential gaps between bursts at
-    the *same* mean offered load — the adversarial case for batch
-    formation, where a deadline-blind scheduler would sit on partial
-    buckets.  Deadlines are ``arrival + slack`` seconds."""
-    rng = np.random.default_rng(seed)
-    lengths = rng.integers(t_lo, t_hi + 1, size=n)
-    if mode == "poisson":
-        times = np.cumsum(rng.exponential(1.0 / rate, size=n))
-    elif mode == "bursty":
-        n_bursts = -(-n // burst)
-        starts = np.cumsum(rng.exponential(burst / rate, size=n_bursts))
-        times = np.repeat(starts, burst)[:n]
-    else:
-        raise ValueError(f"unknown arrival mode {mode!r} (poisson|bursty)")
-    return [(float(t_a),
-             (rng.random((int(t_len), n_in)) < spike_p).astype(np.float32),
-             float(t_a) + slack)
-            for t_a, t_len in zip(times, lengths)]
-
-
 def serve_async(model, trace, *, policy: BucketPolicy, mesh,
                 queue_capacity: int = 256, backpressure: str = "reject",
                 service_model=None, max_events: int | None = None,
-                with_stats: bool = False, donate: bool | None = None):
+                with_stats: bool = False, donate: bool | None = None,
+                noise=None, noise_key=0):
     """One async serving pass over an arrival trace (virtual clock);
     returns ``(results, rids, metrics)``.  ``metrics`` is the
     ``ServerMetrics`` snapshot plus the trajectory numbers
@@ -131,7 +113,7 @@ def serve_async(model, trace, *, policy: BucketPolicy, mesh,
                           backpressure=backpressure,
                           service_model=service_model,
                           max_events=max_events, with_stats=with_stats,
-                          donate=donate)
+                          donate=donate, noise=noise, noise_key=noise_key)
     n0 = trace_count()
     t0 = time.perf_counter()
     results, rids = serve_trace(server, trace)
@@ -193,10 +175,19 @@ def main():
     ap.add_argument("--max-events", type=int, default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--arrivals", default="closed",
-                    choices=["closed", "poisson", "bursty"],
+                    choices=["closed", *ARRIVAL_MODES],
                     help="closed: drain a fixed request list (run_bucketed);"
-                         " poisson/bursty: always-on async loop over a"
-                         " synthetic arrival process (StreamServer)")
+                         " otherwise: always-on async loop over a synthetic"
+                         " arrival process (StreamServer) — poisson, bursty,"
+                         " diurnal (day/night load swing), adversarial"
+                         " (flood/famine with tight deadlines)")
+    ap.add_argument("--noise-sigma", type=float, default=0.0,
+                    help="serving-time analog noise: C2C-ladder gain error "
+                         "sigma (core/noise.py); async arrivals only")
+    ap.add_argument("--scenario", default=None,
+                    help="replay a named chaos scenario from "
+                         f"repro.engine.chaos ({', '.join(SCENARIOS)}) "
+                         "or 'all'; overrides --arrivals")
     ap.add_argument("--rate", type=float, default=200.0,
                     help="mean offered load for async arrivals, requests/s")
     ap.add_argument("--slack", type=float, default=0.25,
@@ -215,6 +206,27 @@ def main():
     kinds = ["mlp", "conv"] if args.model == "both" else [args.model]
     n_req = min(args.requests, 16) if args.smoke else args.requests
     t_hi = 12 if args.smoke else 30
+    if args.scenario is not None:
+        names = list(SCENARIOS) if args.scenario == "all" else \
+            [args.scenario]
+        for kind in kinds:
+            packed = build_demo_model(kind, smoke=args.smoke).pack()
+            for name in names:
+                sc = SCENARIOS[name]
+                if sc.needs_mesh and n_shards < 2:
+                    print(f"chaos/{kind}/{name}: SKIP (needs >= 2 devices; "
+                          f"use --spoof-devices)")
+                    continue
+                _, _, m = run_scenario(packed, sc, mesh=mesh)
+                print(f"chaos/{kind}/{name}: {m['completed']}/{m['requests']}"
+                      f" served | miss rate {m['deadline_miss_rate']:.3f} | "
+                      f"shed {m['shed']} rejected {m['rejected']} | mesh "
+                      f"{m['mesh_size_start']}->{m['mesh_size_end']} | "
+                      f"slo switches {m['slo_switches']} | noise agreement "
+                      f"{m['noise_agreement']:.3f} "
+                      f"({m['noise_probes']} probes)")
+        return
+
     for kind in kinds:
         model = build_demo_model(kind, smoke=args.smoke)
         packed = model.pack()
@@ -230,15 +242,17 @@ def main():
             # the buckets the hot replay hits and the retrace gate below is
             # deterministic (the bench calibrates real service times instead)
             svc = lambda b, t: 0.0  # noqa: E731
+            noise = (AnalogNoise(weight_sigma=args.noise_sigma)
+                     if args.noise_sigma > 0 else None)
             serve_async(packed, trace, policy=policy, mesh=mesh,
                         queue_capacity=args.queue_capacity,
                         service_model=svc, max_events=args.max_events,
-                        donate=donate)
+                        donate=donate, noise=noise)
             results, rids, m = serve_async(
                 packed, trace, policy=policy, mesh=mesh,
                 queue_capacity=args.queue_capacity,
                 service_model=svc, max_events=args.max_events,
-                donate=donate)
+                donate=donate, noise=noise)
             assert m["new_traces"] == 0, "hot async pass retraced the jit!"
             preds = [int(results[r].out_spikes.sum(axis=0).argmax())
                      for r in rids[:8] if r is not None and r in results]

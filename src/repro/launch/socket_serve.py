@@ -1,0 +1,368 @@
+"""Live-socket serving front end: real connections -> StreamServer.
+
+Until now the always-on loop only replayed closed traces; this launcher
+binds it to a TCP socket speaking the length-prefixed
+:mod:`repro.engine.ingest` protocol, so real clients (the soak harness,
+``benchmarks/soak_bench.py``, or an actual DVS gateway) drive admission,
+deadlines, backpressure, and chaos recovery over a live connection:
+
+  PYTHONPATH=src python -m repro.launch.socket_serve --model mlp \
+      --port 7473 [--spoof-devices 2] [--noise-sigma 0.05] \
+      [--slo-target 0.1] [--smoke]
+
+Design: a single-threaded ``selectors`` event loop.  Engine dispatches run
+inline (the loop drains sockets between engine calls — exactly the
+single-threaded-server model ``serve_trace`` simulates, so the soak
+numbers and the VirtualClock replays describe the same machine).  The
+select timeout tracks ``StreamServer.next_deadline()``, so deadline-forced
+partial dispatches fire on time even when no bytes arrive.  Every request
+gets an answer: results as bit-exact spike rasters, rejections (admission,
+backpressure, shed) as reasoned REJECT frames.
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import logging
+import math
+import selectors
+import socket
+import threading
+import time
+
+from repro.launch._spoof import (assert_spoof_applied,
+                                 spoof_devices_from_argv)
+
+_SPOOFED = spoof_devices_from_argv()  # before any jax import in this process
+
+import numpy as np  # noqa: E402
+
+from repro.engine import ingest  # noqa: E402
+from repro.engine.serving import BucketPolicy  # noqa: E402
+from repro.engine.stream_server import SLOPolicy, StreamServer  # noqa: E402
+
+_log = logging.getLogger(__name__)
+
+# select timeout ceiling: how stale next_deadline() may get while idle
+_TICK_S = 0.05
+
+
+class _Conn:
+    """Per-connection state: incremental decoder + in-flight accounting."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.decoder = ingest.FrameDecoder()
+        self.inflight = 0
+        self.draining = False       # client sent EOF; close when drained
+
+
+class SpikeSocketServer:
+    """A :class:`StreamServer` behind a TCP listener.
+
+    ``serve(...)`` runs the event loop in the calling thread;
+    :func:`serving_thread` wraps it for in-process harnesses.  All
+    ``StreamServer`` chaos knobs (noise, SLO policy, chaos hook, mesh)
+    pass through ``server_kwargs`` — the soak harness injects device loss
+    into a *live* socket server exactly as the deterministic replays do.
+    """
+
+    def __init__(self, model, *, policy: BucketPolicy,
+                 host: str = "127.0.0.1", port: int = 0, **server_kwargs):
+        self.server = StreamServer(model, policy=policy, **server_kwargs)
+        self._listener = socket.create_server((host, port))
+        self._listener.setblocking(False)
+        self.address = self._listener.getsockname()
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._listener, selectors.EVENT_READ, None)
+        self._conns: dict[socket.socket, _Conn] = {}
+        self._owner: dict[int, tuple[_Conn, int]] = {}  # rid -> (conn, req_id)
+        self._rej_seen = 0
+        self._stop = threading.Event()
+        self.served = 0
+
+    # ------------------------------------------------------------- control
+
+    def stop(self) -> None:
+        """Ask the loop to exit after its current iteration (thread-safe)."""
+        self._stop.set()
+
+    # ----------------------------------------------------------- plumbing
+
+    def _send(self, conn: _Conn, data: bytes) -> None:
+        try:
+            conn.sock.sendall(data)
+        except OSError:
+            self._drop(conn)
+
+    def _drop(self, conn: _Conn) -> None:
+        if conn.sock not in self._conns:
+            return
+        with contextlib.suppress(KeyError):
+            self._sel.unregister(conn.sock)
+        del self._conns[conn.sock]
+        conn.sock.close()
+        # orphan its in-flight requests: results with no owner are dropped
+        self._owner = {rid: (c, q) for rid, (c, q) in self._owner.items()
+                       if c is not conn}
+
+    def _drain_new_rejections(self) -> None:
+        """Answer every rejection recorded since the last drain — including
+        queued requests shed by backpressure after admission."""
+        srv = self.server
+        total = srv.metrics.rejected + srv.metrics.shed
+        new = total - self._rej_seen
+        if new <= 0:
+            return
+        self._rej_seen = total
+        for rej in list(srv.rejections)[-new:]:
+            if rej.rid is None:
+                continue            # pre-admission: answered at submit time
+            owner = self._owner.pop(rej.rid, None)
+            if owner is not None:
+                conn, req_id = owner
+                conn.inflight -= 1
+                self._send(conn, ingest.encode_rejection(
+                    req_id, f"{rej.reason}: {rej.detail}"))
+
+    def _deliver(self, done) -> None:
+        for rid, res in done:
+            owner = self._owner.pop(rid, None)
+            if owner is None:
+                continue            # connection vanished mid-service
+            conn, req_id = owner
+            conn.inflight -= 1
+            self.served += 1
+            self._send(conn, ingest.encode_result(req_id, res.out_spikes))
+
+    def _on_request(self, conn: _Conn, frame: ingest.Frame) -> None:
+        if frame.kind != ingest.KIND_REQUEST:
+            raise ingest.ProtocolError(
+                f"client sent frame kind {frame.kind}, expected REQUEST")
+        req_id, stream, slack = ingest.decode_request(frame.payload)
+        rid = self.server.submit(
+            stream, slack=None if math.isinf(slack) else slack)
+        if rid is None:
+            rej = self.server.rejections[-1]
+            self._rej_seen += 1
+            self._send(conn, ingest.encode_rejection(
+                req_id, f"{rej.reason}: {rej.detail}"))
+            return
+        self._owner[rid] = (conn, req_id)
+        conn.inflight += 1
+
+    def _on_readable(self, sock: socket.socket) -> None:
+        if sock is self._listener:
+            client, addr = self._listener.accept()
+            client.setblocking(False)
+            conn = _Conn(client)
+            self._conns[client] = conn
+            self._sel.register(client, selectors.EVENT_READ, conn)
+            _log.info("socket_serve: connection from %s", addr)
+            return
+        conn = self._conns[sock]
+        try:
+            chunk = sock.recv(1 << 16)
+        except OSError:
+            self._drop(conn)
+            return
+        if not chunk:
+            conn.draining = True    # EOF: finish its in-flight, then close
+            return
+        try:
+            for frame in conn.decoder.feed(chunk):
+                self._on_request(conn, frame)
+                # a full-bucket submit may have dispatched inline
+                self._deliver(self.server.collect())
+                self._drain_new_rejections()
+        except ingest.ProtocolError as e:
+            _log.warning("socket_serve: protocol error, dropping client: %s",
+                         e)
+            self._drop(conn)
+
+    # ---------------------------------------------------------------- loop
+
+    def _tick(self) -> None:
+        """One scheduler beat: fire due deadline dispatches, deliver."""
+        self._deliver(self.server.poll())
+        self._drain_new_rejections()
+        for conn in [c for c in self._conns.values()
+                     if c.draining and c.inflight == 0]:
+            self._drop(conn)
+
+    def serve(self, *, max_requests: int | None = None,
+              idle_flush_s: float = 0.25) -> None:
+        """Run the event loop until :meth:`stop` (or ``max_requests``
+        results have been served).  ``idle_flush_s``: with pending
+        best-effort requests, no deadline due, and no bytes arriving for
+        this long, flush — a lone trailing request never hangs the
+        socket."""
+        last_activity = time.monotonic()
+        while not self._stop.is_set():
+            nd = self.server.next_deadline()
+            timeout = (_TICK_S if nd is None
+                       else min(max(nd - self.server.now(), 0.0), _TICK_S))
+            events = self._sel.select(timeout)
+            if events:
+                last_activity = time.monotonic()
+            for key, _ in events:
+                self._on_readable(key.fileobj)
+            self._tick()
+            if (self.server.queue_depth > 0 and not events
+                    and self.server.next_deadline() is None
+                    and time.monotonic() - last_activity > idle_flush_s):
+                self._deliver(self.server.flush())
+                self._drain_new_rejections()
+            if max_requests is not None and self.served >= max_requests:
+                break
+        self._deliver(self.server.flush())
+        self._drain_new_rejections()
+
+    def close(self) -> None:
+        self.stop()
+        for conn in list(self._conns.values()):
+            self._drop(conn)
+        with contextlib.suppress(KeyError):
+            self._sel.unregister(self._listener)
+        self._listener.close()
+        self._sel.close()
+
+
+@contextlib.contextmanager
+def serving_thread(server: SpikeSocketServer, **serve_kwargs):
+    """Run ``server.serve()`` on a daemon thread for in-process harnesses
+    (the soak bench and the tier-1 socket test); joins and closes on
+    exit."""
+    t = threading.Thread(target=server.serve, kwargs=serve_kwargs,
+                         daemon=True, name="spike-socket-serve")
+    t.start()
+    try:
+        yield server
+    finally:
+        server.stop()
+        t.join(timeout=30)
+        server.close()
+
+
+# ------------------------------------------------------------------ client
+
+class SpikeClient:
+    """A minimal blocking client for the ingest protocol — what the soak
+    harness runs many of.  ``send`` streams a request; ``recv_all`` blocks
+    until every outstanding request is answered (result or rejection)."""
+
+    def __init__(self, host: str, port: int, timeout: float = 60.0):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+        self.decoder = ingest.FrameDecoder()
+        self._next_id = 0
+        self.results: dict[int, np.ndarray] = {}
+        self.rejections: dict[int, str] = {}
+
+    def send(self, stream, slack: float = math.inf) -> int:
+        req_id = self._next_id
+        self._next_id += 1
+        self.sock.sendall(ingest.encode_request(req_id, stream, slack))
+        return req_id
+
+    def _pump(self) -> None:
+        chunk = self.sock.recv(1 << 16)
+        if not chunk:
+            raise ConnectionError("server closed the connection")
+        for frame in self.decoder.feed(chunk):
+            if frame.kind == ingest.KIND_RESULT:
+                req_id, out = ingest.decode_result(frame.payload)
+                self.results[req_id] = out
+            elif frame.kind == ingest.KIND_REJECT:
+                req_id, reason = ingest.decode_rejection(frame.payload)
+                self.rejections[req_id] = reason
+            else:
+                raise ingest.ProtocolError(
+                    f"server sent frame kind {frame.kind}")
+
+    def recv_all(self) -> None:
+        """Block until every sent request has a result or a rejection."""
+        while len(self.results) + len(self.rejections) < self._next_id:
+            self._pump()
+
+    def close(self) -> None:
+        self.sock.close()
+
+
+# --------------------------------------------------------------------- CLI
+
+def main():
+    from repro.engine.sharded_run import snn_serve_mesh
+    from repro.launch.serve_snn import build_demo_model, synth_requests
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="mlp", choices=["mlp", "conv"])
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7473)
+    ap.add_argument("--data", type=int, default=None,
+                    help="mesh data-axis extent (default: all devices)")
+    ap.add_argument("--spoof-devices", type=int, default=None)
+    ap.add_argument("--queue-capacity", type=int, default=256)
+    ap.add_argument("--backpressure", default="reject",
+                    choices=["reject", "shed_oldest"])
+    ap.add_argument("--default-slack", type=float, default=math.inf,
+                    help="deadline slack for requests that send inf")
+    ap.add_argument("--noise-sigma", type=float, default=0.0,
+                    help="serving-time C2C gain error (core/noise.py); "
+                         "shadow probes feed the noise_agreement metric")
+    ap.add_argument("--slo-target", type=float, default=None,
+                    help="enable SLO shed-vs-extend switching at this "
+                         "windowed deadline-miss rate")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve a built-in burst of local requests through "
+                         "the socket and exit (CI liveness check)")
+    args = ap.parse_args()
+    assert_spoof_applied(_SPOOFED)
+    logging.basicConfig(level=logging.INFO)
+
+    from repro.core.noise import AnalogNoise  # after jax device spoof
+
+    mesh = snn_serve_mesh(args.data)
+    model = build_demo_model(args.model, smoke=args.smoke)
+    packed = model.pack()
+    policy = BucketPolicy.for_mesh(mesh.size)
+    noise = (AnalogNoise(weight_sigma=args.noise_sigma)
+             if args.noise_sigma > 0 else None)
+    slo = (SLOPolicy(target_miss_rate=args.slo_target)
+           if args.slo_target is not None else None)
+    srv = SpikeSocketServer(
+        packed, policy=policy, host=args.host, port=args.port, mesh=mesh,
+        queue_capacity=args.queue_capacity, backpressure=args.backpressure,
+        default_slack=args.default_slack, noise=noise, slo=slo)
+    host, port = srv.address
+    print(f"socket-serve/{args.model}: listening on {host}:{port} "
+          f"({mesh.size}-way mesh, buckets<={policy.n_buckets})")
+
+    if args.smoke:
+        # best-effort requests: full buckets dispatch inline, the remainder
+        # rides the idle-flush path — no deadline misses from cold-jit wall
+        # time polluting a liveness check
+        streams = synth_requests(12, packed.n_in, t_hi=12, seed=1)
+        with serving_thread(srv, max_requests=len(streams)):
+            cli = SpikeClient(host, port)
+            for s in streams:
+                cli.send(s)
+            cli.recv_all()
+            cli.close()
+        snap = srv.server.metrics.snapshot()
+        assert len(cli.results) == len(streams), \
+            f"served {len(cli.results)}/{len(streams)}"
+        print(f"socket-serve smoke: {snap['completed']} served, "
+              f"p50 latency {snap['p50_latency_s']*1e3:.1f} ms, "
+              f"miss rate {snap['deadline_miss_rate']:.3f}")
+        return
+    try:
+        srv.serve()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+"""Chaos scenarios replay deterministically, and the server survives them.
+
+The soak harness's failure scripts (engine/chaos.py) are only trustworthy
+if they are reproducible: every scenario here runs twice on a VirtualClock
+and must produce identical metrics and bit-identical spike outputs — no
+wall-clock flakiness in tier 1.  Device-loss scenarios need >= 2 devices,
+so they run in a spoofed-device subprocess (same pattern as
+tests/test_sharded_engine.py).  The socket front end is exercised over a
+real localhost connection: what a client reads off the wire must be
+bit-exact against the single-device engine.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import map_model
+from repro.core.energy import AcceleratorSpec
+from repro.core.lif import LIFParams
+from repro.engine import run_batched
+from repro.engine.chaos import (ARRIVAL_MODES, SCENARIOS, ChaosScenario,
+                                make_chaos_hook, run_scenario,
+                                synth_arrival_trace)
+from repro.engine.sharded_run import DeviceLossError
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SPEC = AcceleratorSpec("chaos-test", n_cores=3, n_engines=4, n_caps=8,
+                       weight_mem_bytes=1 << 18)
+
+
+def _model(rng, sizes=(14, 12, 6)):
+    ws = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 0.5, (sizes[i], sizes[i + 1])).astype(np.float32)
+        w[rng.random(w.shape) > 0.6] = 0
+        ws.append(w)
+    return map_model(ws, SPEC, lif=LIFParams(beta=0.8, threshold=0.5))
+
+
+# ---------------------------------------------------------- arrival synth
+
+def test_arrival_modes_produce_valid_traces():
+    """Every mode yields n non-decreasing (t, stream, deadline) tuples."""
+    for mode in ARRIVAL_MODES:
+        trace = synth_arrival_trace(20, 14, mode=mode, seed=3)
+        assert len(trace) == 20
+        times = [t for t, _, _ in trace]
+        assert times == sorted(times)
+        for t_a, stream, deadline in trace:
+            assert stream.ndim == 2 and stream.shape[1] == 14
+            assert deadline > t_a
+
+
+def test_adversarial_trace_mixes_tight_and_loose_deadlines():
+    """Floods carry quarter slack, famines full slack — the engineered
+    worst case for batch formation actually shows up in the trace."""
+    trace = synth_arrival_trace(24, 14, mode="adversarial", slack=0.4,
+                                t_lo=3, t_hi=12, seed=0)
+    slacks = {round(d - t, 6) for t, _, d in trace}
+    assert slacks == {0.1, 0.4}
+    lengths = {s.shape[0] for _, s, _ in trace}
+    assert lengths == {3, 12}
+
+
+def test_unknown_arrival_mode_rejected():
+    with pytest.raises(ValueError, match="unknown arrival mode"):
+        synth_arrival_trace(4, 14, mode="lunar")
+
+
+def test_chaos_hook_fires_once_per_scripted_ordinal():
+    hook = make_chaos_hook([(2, 1)])
+    hook(0)
+    hook(1)
+    with pytest.raises(DeviceLossError) as ei:
+        hook(2)
+    assert ei.value.n_lost == 1
+    hook(2)     # the recovery retry at the same ordinal proceeds
+
+
+# ----------------------------------------------- deterministic replays
+
+def _nonmesh_scenarios():
+    return [s for s in SCENARIOS.values() if not s.needs_mesh]
+
+
+def test_every_nonmesh_scenario_replays_deterministically(rng):
+    """Two runs of the same scenario: identical metrics, bit-identical
+    outputs — the property that makes soak logic tier-1 testable."""
+    model = _model(rng)
+    for sc in _nonmesh_scenarios():
+        r1, rids1, m1 = run_scenario(model, sc)
+        r2, rids2, m2 = run_scenario(model, sc)
+        assert m1 == m2, f"{sc.name}: metrics differ between replays"
+        assert rids1 == rids2
+        assert r1.keys() == r2.keys()
+        for rid in r1:
+            assert np.array_equal(r1[rid].out_spikes, r2[rid].out_spikes), \
+                f"{sc.name}: outputs differ for rid {rid}"
+
+
+def test_scenarios_conserve_requests(rng):
+    """completed + rejected + shed == submitted, chaos or not — no request
+    silently vanishes."""
+    model = _model(rng)
+    for sc in _nonmesh_scenarios():
+        _, _, m = run_scenario(model, sc)
+        assert m["completed"] + m["rejected"] + m["shed"] == m["submitted"], \
+            f"{sc.name}: request leak"
+        assert m["scenario"] == sc.name
+        assert m["makespan_s"] > 0.0
+
+
+def test_baseline_scenario_is_bit_exact_vs_run_batched(rng):
+    """A scenario-served request equals the same stream run alone through
+    the single-device engine (padding/virtual-clock machinery is
+    numerically invisible)."""
+    model = _model(rng)
+    packed = model.pack()
+    sc = SCENARIOS["baseline"]
+    results, rids, _ = run_scenario(packed, sc)
+    trace = synth_arrival_trace(sc.n_requests, packed.n_in,
+                                mode=sc.arrivals, rate=sc.rate,
+                                slack=sc.slack, t_lo=sc.t_lo, t_hi=sc.t_hi,
+                                seed=sc.seed)
+    i = int(np.argmax([s.shape[0] for _, s, _ in trace]))
+    assert rids[i] is not None
+    alone = run_batched(packed, trace[i][1][None], with_stats=False)
+    assert np.array_equal(results[rids[i]].out_spikes, alone.out_spikes[0])
+
+
+def test_analog_noise_scenario_tracks_agreement(rng):
+    """Serving through a noisy device instance populates the
+    accuracy-under-noise metrics: every dispatch probed, agreement in
+    [0, 1], and the perturbation actually changes some outputs."""
+    model = _model(rng)
+    _, _, m = run_scenario(model, SCENARIOS["analog_noise"])
+    assert m["noise_probes"] == m["completed"] > 0
+    assert 0.0 <= m["noise_agreement"] <= 1.0
+    # the noisy instance must differ from the clean one somewhere
+    clean, _, _ = run_scenario(model, SCENARIOS["baseline"])
+    noisy, _, _ = run_scenario(
+        model, ChaosScenario(name="noise-vs-clean", description="",
+                             noise_sigma=0.05))
+    diff = any(not np.array_equal(clean[r].out_spikes, noisy[r].out_spikes)
+               for r in clean)
+    assert diff, "5% analog noise changed no output at all"
+
+
+def test_slo_scenario_flips_to_shedding(rng):
+    """Overload with tight deadlines trips the SLO controller: at least
+    one switch, shedding engaged, and sheds actually recorded."""
+    model = _model(rng)
+    _, _, m = run_scenario(model, SCENARIOS["slo_shed"])
+    assert m["slo_switches"] >= 1
+    assert m["shed"] + m["rejected"] > 0
+    assert m["deadline_miss_rate"] > SCENARIOS["slo_shed"].slo.target_miss_rate
+
+
+# ----------------------------------------------- device loss (spoofed mesh)
+
+def _run(script: str, devices: int = 2) -> str:
+    env = dict(os.environ, PYTHONPATH="src")
+    pre = (f'import os; os.environ["XLA_FLAGS"] = '
+           f'"--xla_force_host_platform_device_count={devices}"\n')
+    p = subprocess.run([sys.executable, "-c", pre + script],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=600)
+    assert p.returncode == 0, f"stdout:\n{p.stdout}\nstderr:\n{p.stderr}"
+    return p.stdout
+
+
+def test_device_loss_scenarios_recover_on_shrunken_mesh():
+    """device_loss and blackout on a spoofed 2-device mesh: the scripted
+    loss fires, the server recovers onto 1 device, every admitted request
+    is still served, and both replays are deterministic."""
+    out = _run("""
+import numpy as np
+from repro.core.accelerator import map_model
+from repro.core.energy import AcceleratorSpec
+from repro.core.lif import LIFParams
+from repro.engine.chaos import SCENARIOS, run_scenario
+from repro.engine.sharded_run import snn_serve_mesh
+
+rng = np.random.default_rng(0)
+ws = []
+for a, b in [(14, 12), (12, 6)]:
+    w = rng.normal(0, 0.5, (a, b)).astype(np.float32)
+    w[rng.random(w.shape) > 0.6] = 0
+    ws.append(w)
+model = map_model(ws, AcceleratorSpec("t", n_cores=3, n_engines=4, n_caps=8,
+                                      weight_mem_bytes=1 << 18),
+                  lif=LIFParams(beta=0.8, threshold=0.5))
+mesh = snn_serve_mesh(None)
+assert mesh.size == 2
+for name in ("device_loss", "blackout"):
+    sc = SCENARIOS[name]
+    r1, _, m1 = run_scenario(model, sc, mesh=mesh)
+    r2, _, m2 = run_scenario(model, sc, mesh=mesh)
+    assert m1 == m2, f"{name}: not deterministic"
+    assert all(np.array_equal(r1[k].out_spikes, r2[k].out_spikes)
+               for k in r1)
+    assert m1["device_losses"] == len(sc.lose_devices), name
+    assert (m1["mesh_size_start"], m1["mesh_size_end"]) == (2, 1), name
+    assert m1["served_all_admitted"], f"{name}: lost admitted requests"
+    print(name, "OK", m1["completed"], m1["noise_agreement"])
+""")
+    assert "device_loss OK" in out
+    assert "blackout OK" in out
+
+
+def test_losing_every_device_is_fatal():
+    """Recovery needs survivors: shrinking past the last device raises
+    instead of serving on nothing."""
+    out = _run("""
+import numpy as np
+from repro.engine.sharded_run import DeviceLossError, shrink_mesh, \
+    snn_serve_mesh
+
+mesh = snn_serve_mesh(None)
+small = shrink_mesh(mesh, 1)
+assert small.size == 1 and small.axis_names == mesh.axis_names
+try:
+    shrink_mesh(small, 1)
+except DeviceLossError as e:
+    print("fatal OK", e.n_lost)
+""")
+    assert "fatal OK" in out
+
+
+# ------------------------------------------------------------ live socket
+
+def test_socket_server_round_trip_is_bit_exact(rng):
+    """A real localhost connection through the ingest protocol: every
+    request answered, results bit-exact vs run_batched, overlong requests
+    rejected with a reason."""
+    from repro.engine.serving import BucketPolicy
+    from repro.launch.socket_serve import (SpikeClient, SpikeSocketServer,
+                                           serving_thread)
+    model = _model(rng)
+    packed = model.pack()
+    streams = [(rng.random((t, packed.n_in)) < 0.3).astype(np.float32)
+               for t in (3, 5, 9, 4, 7, 9)]
+    srv = SpikeSocketServer(
+        packed, policy=BucketPolicy(batch_sizes=(2, 4), time_steps=(10,)),
+        port=0, overlong="reject")
+    host, port = srv.address
+    with serving_thread(srv, max_requests=len(streams)):
+        cli = SpikeClient(host, port)
+        for s in streams:
+            cli.send(s)
+        overlong = cli.send(
+            (rng.random((40, packed.n_in)) < 0.3).astype(np.float32))
+        cli.recv_all()
+        cli.close()
+    assert len(cli.results) == len(streams)
+    assert overlong in cli.rejections
+    assert "overlong" in cli.rejections[overlong]
+    for i, s in enumerate(streams):
+        alone = run_batched(packed, s[None], with_stats=False)
+        assert np.array_equal(cli.results[i], alone.out_spikes[0]), \
+            f"socket result {i} != run_batched"
+    assert srv.server.metrics.snapshot()["completed"] == len(streams)

@@ -1,0 +1,71 @@
+"""The operator docs are locked to the code they describe.
+
+docs/SERVING.md carries the metrics reference every dashboard reads; if
+``METRIC_KEYS`` / ``TELEMETRY_KEYS`` / the chaos-scenario registry change
+without the tables changing (or vice versa), this module fails — the doc
+IS part of the schema lock.  The markdown link checker runs here too, so a
+renamed doc or heading breaks tier 1, not a reader.
+"""
+
+import os
+import re
+import subprocess
+import sys
+
+from repro.engine import METRIC_KEYS, SCENARIOS, TELEMETRY_KEYS
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERVING_MD = os.path.join(REPO, "docs", "SERVING.md")
+
+
+def _table_keys(text: str, section: str) -> tuple[str, ...]:
+    """Backtick-quoted first-column entries of the first table after the
+    given heading (skipping the header and separator rows)."""
+    start = text.index(section)
+    end = text.find("\n#", start + len(section))
+    block = text[start:end if end != -1 else len(text)]
+    keys = []
+    for line in block.splitlines():
+        m = re.match(r"\|\s*`([^`]+)`\s*\|", line)
+        if m:
+            keys.append(m.group(1))
+    return tuple(keys)
+
+
+def _serving_md() -> str:
+    with open(SERVING_MD, encoding="utf-8") as f:
+        return f.read()
+
+
+def test_metric_keys_table_matches_code():
+    """Every ServerMetrics.snapshot() key is documented, in order — the
+    docs half of test_serving.py's schema lock."""
+    doc = _table_keys(_serving_md(), "### `ServerMetrics.snapshot()` keys")
+    assert doc == METRIC_KEYS, (
+        f"docs/SERVING.md metrics table is out of sync with METRIC_KEYS\n"
+        f"  documented: {doc}\n  code:       {METRIC_KEYS}")
+
+
+def test_telemetry_keys_table_matches_code():
+    doc = _table_keys(_serving_md(), "### Per-dispatch telemetry keys")
+    assert doc == TELEMETRY_KEYS, (
+        f"docs/SERVING.md telemetry table is out of sync with "
+        f"TELEMETRY_KEYS\n  documented: {doc}\n  code: {TELEMETRY_KEYS}")
+
+
+def test_scenario_table_matches_registry():
+    doc = _table_keys(_serving_md(), "## Chaos scenarios")
+    assert doc == tuple(SCENARIOS), (
+        f"docs/SERVING.md scenario table is out of sync with "
+        f"chaos.SCENARIOS\n  documented: {doc}\n"
+        f"  code:       {tuple(SCENARIOS)}")
+
+
+def test_markdown_links_resolve():
+    """tools/check_links.py over README.md + docs/ — the same invocation
+    the CI docs job runs."""
+    p = subprocess.run(
+        [sys.executable, os.path.join("tools", "check_links.py"),
+         "README.md", "docs"],
+        capture_output=True, text=True, cwd=REPO, timeout=60)
+    assert p.returncode == 0, f"broken links:\n{p.stderr}\n{p.stdout}"

@@ -1,0 +1,124 @@
+"""Wire-protocol contract for live spike-stream ingest (engine/ingest.py).
+
+The framing is what a real sensor link speaks to the socket front end, so
+the suite locks it byte-level: exact round-trips through bit-packing at
+awkward shapes, incremental decoding across arbitrary chunk boundaries
+(including one-byte-at-a-time), and loud ProtocolErrors on corruption —
+a length-prefixed stream cannot resynchronize, so corruption must never
+pass silently.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.engine import ingest
+
+
+def _raster(rng, t, n):
+    return (rng.random((t, n)) < 0.3).astype(np.float32)
+
+
+# ------------------------------------------------------------- round-trips
+
+def test_request_roundtrip_bit_exact(rng):
+    """[T, n_in] rasters survive bit-packing exactly, including shapes
+    whose T*n_in is not a multiple of 8."""
+    for t, n in [(1, 1), (3, 7), (13, 17), (30, 64), (8, 8)]:
+        stream = _raster(rng, t, n)
+        frame = ingest.FrameDecoder().feed(
+            ingest.encode_request(7, stream, 0.25))[0]
+        assert frame.kind == ingest.KIND_REQUEST
+        req_id, out, slack = ingest.decode_request(frame.payload)
+        assert req_id == 7 and slack == 0.25
+        assert out.shape == (t, n)
+        assert np.array_equal(out, stream)
+
+
+def test_request_default_slack_is_inf(rng):
+    frame = ingest.FrameDecoder().feed(
+        ingest.encode_request(0, _raster(rng, 4, 5)))[0]
+    assert frame.kind == ingest.KIND_REQUEST
+    _, _, slack = ingest.decode_request(frame.payload)
+    assert math.isinf(slack)
+
+
+def test_result_roundtrip_bit_exact(rng):
+    out = _raster(rng, 9, 10)
+    frame = ingest.FrameDecoder().feed(ingest.encode_result(42, out))[0]
+    assert frame.kind == ingest.KIND_RESULT
+    req_id, got = ingest.decode_result(frame.payload)
+    assert req_id == 42
+    assert np.array_equal(got, out)
+
+
+def test_rejection_roundtrip():
+    frame = ingest.FrameDecoder().feed(
+        ingest.encode_rejection(3, "queue_full: capacity 8"))[0]
+    assert frame.kind == ingest.KIND_REJECT
+    assert ingest.decode_rejection(frame.payload) == \
+        (3, "queue_full: capacity 8")
+
+
+# ------------------------------------------------------ incremental decode
+
+def test_decoder_handles_arbitrary_chunk_boundaries(rng):
+    """Frames come out whole no matter how the transport splits the bytes
+    — including a one-byte-at-a-time trickle."""
+    blobs = [ingest.encode_request(i, _raster(rng, 3 + i, 11), float(i))
+             for i in range(5)]
+    wire = b"".join(blobs)
+    for chunk_size in (1, 2, 7, 64, len(wire)):
+        dec = ingest.FrameDecoder()
+        frames = []
+        for off in range(0, len(wire), chunk_size):
+            frames.extend(dec.feed(wire[off:off + chunk_size]))
+        assert len(frames) == 5
+        assert dec.pending_bytes == 0
+        for i, frame in enumerate(frames):
+            req_id, stream, slack = ingest.decode_request(frame.payload)
+            assert req_id == i and slack == float(i)
+            assert stream.shape == (3 + i, 11)
+
+
+def test_decoder_emits_multiple_frames_per_chunk(rng):
+    wire = (ingest.encode_rejection(1, "a") + ingest.encode_rejection(2, "b")
+            + ingest.encode_rejection(3, "c"))
+    frames = ingest.FrameDecoder().feed(wire)
+    assert [ingest.decode_rejection(f.payload)[0] for f in frames] == \
+        [1, 2, 3]
+
+
+# ------------------------------------------------------------- corruption
+
+def test_bad_magic_raises():
+    with pytest.raises(ingest.ProtocolError, match="magic"):
+        ingest.FrameDecoder().feed(b"XX" + b"\x00" * 10)
+
+
+def test_bad_version_raises(rng):
+    wire = bytearray(ingest.encode_rejection(0, "ok"))
+    wire[2] = ingest.VERSION + 1
+    with pytest.raises(ingest.ProtocolError, match="version"):
+        ingest.FrameDecoder().feed(bytes(wire))
+
+
+def test_absurd_length_prefix_raises():
+    wire = ingest._HEADER.pack(ingest.MAGIC, ingest.VERSION,
+                               ingest.KIND_REQUEST, ingest.MAX_PAYLOAD + 1)
+    with pytest.raises(ingest.ProtocolError, match="length"):
+        ingest.FrameDecoder().feed(wire)
+
+
+def test_truncated_payloads_raise(rng):
+    full = ingest.FrameDecoder().feed(
+        ingest.encode_request(0, _raster(rng, 4, 9)))[0].payload
+    with pytest.raises(ingest.ProtocolError):
+        ingest.decode_request(full[:8])          # header cut short
+    with pytest.raises(ingest.ProtocolError):
+        ingest.decode_request(full[:-1])         # raster bytes missing
+    with pytest.raises(ingest.ProtocolError):
+        ingest.decode_result(b"\x00\x00")
+    with pytest.raises(ingest.ProtocolError):
+        ingest.decode_rejection(b"\x01")

@@ -4,7 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.noise import AnalogNoise, perturb_beta, perturb_membrane, perturb_weights
+from repro.core.noise import (AnalogNoise, as_noise_key, perturb_beta,
+                              perturb_membrane, perturb_packed,
+                              perturb_weights)
 
 
 def test_zero_noise_is_identity(rng):
@@ -53,3 +55,74 @@ def test_snn_accuracy_degrades_gracefully(rng):
     large = np.mean([acc(noisy(0.8, s)) for s in range(3)])
     assert small > base - 0.15
     assert large < small
+
+
+# ------------------------------------------- serving-side device instances
+
+def _mapped_model(rng, sizes=(14, 12, 6)):
+    from repro.core.accelerator import map_model
+    from repro.core.energy import AcceleratorSpec
+    from repro.core.lif import LIFParams
+    ws = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 0.5, (sizes[i], sizes[i + 1])).astype(np.float32)
+        w[rng.random(w.shape) > 0.6] = 0
+        ws.append(w)
+    return map_model(ws, AcceleratorSpec("noise-test", n_cores=3,
+                                         n_engines=4, n_caps=8,
+                                         weight_mem_bytes=1 << 18),
+                     lif=LIFParams(beta=0.8, threshold=0.5))
+
+
+def _round_weights(packed):
+    return [np.asarray(r.w_dense if r.w_dense is not None else r.coo_val)
+            for layer in packed.layers for r in layer.rounds]
+
+
+def test_perturb_packed_is_a_deterministic_device_instance(rng):
+    """Same (key, sigma) -> bit-identical noisy model; different keys ->
+    different device instances; zero sigma is the identity (same object);
+    absent synapses stay exactly zero."""
+    packed = _mapped_model(rng).pack()
+    n = AnalogNoise(weight_sigma=0.05)
+    a = perturb_packed(as_noise_key(7), packed, n)
+    b = perturb_packed(as_noise_key(7), packed, n)
+    for wa, wb in zip(_round_weights(a), _round_weights(b)):
+        assert np.array_equal(wa, wb)
+    other = perturb_packed(as_noise_key(8), packed, n)
+    assert any(not np.array_equal(wa, wo) for wa, wo in
+               zip(_round_weights(a), _round_weights(other)))
+    assert perturb_packed(as_noise_key(7), packed, AnalogNoise()) is packed
+    for w0, wa in zip(_round_weights(packed), _round_weights(a)):
+        assert np.array_equal(wa == 0, w0 == 0), \
+            "multiplicative noise must preserve the sparsity pattern"
+
+
+def test_run_bucketed_noise_injection_is_reproducible(rng):
+    """The serving entry point's noise kwargs name one device instance:
+    same seed -> bit-exact outputs (the accuracy delta vs clean is a fixed
+    number, not a distribution); no noise -> the clean outputs."""
+    from repro.engine import BucketPolicy, run_bucketed
+    model = _mapped_model(rng)
+    streams = [(rng.random((t, 14)) < 0.3).astype(np.float32)
+               for t in (4, 9, 6, 3)]
+    policy = BucketPolicy(batch_sizes=(2, 4), time_steps=(10,))
+    kw = dict(policy=policy, with_stats=False)
+    noise = AnalogNoise(weight_sigma=0.08)
+    clean = run_bucketed(model, streams, **kw)
+    n1 = run_bucketed(model, streams, noise=noise, noise_key=3, **kw)
+    n2 = run_bucketed(model, streams, noise=noise, noise_key=3, **kw)
+    for r1, r2 in zip(n1, n2):
+        assert np.array_equal(r1.out_spikes, r2.out_spikes)
+    assert any(not np.array_equal(c.out_spikes, r.out_spikes)
+               for c, r in zip(clean, n1)), \
+        "8% serving noise changed no output"
+    same_as_clean = run_bucketed(model, streams, noise=None, **kw)
+    for c, r in zip(clean, same_as_clean):
+        assert np.array_equal(c.out_spikes, r.out_spikes)
+    # a fixed, reproducible accuracy-delta style statistic
+    flips1 = sum(int(c.out_spikes.sum(0).argmax() != r.out_spikes.sum(0)
+                     .argmax()) for c, r in zip(clean, n1))
+    flips2 = sum(int(c.out_spikes.sum(0).argmax() != r.out_spikes.sum(0)
+                     .argmax()) for c, r in zip(clean, n2))
+    assert flips1 == flips2

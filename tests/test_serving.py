@@ -235,10 +235,12 @@ def test_server_metrics_schema_locked():
         "deadline_misses", "deadline_miss_rate", "dispatches",
         "forced_dispatches", "policy_extensions", "queue_depth",
         "max_queue_depth", "bucket_fill_ratio", "p50_ttfd_s", "p99_ttfd_s",
-        "p50_latency_s", "p99_latency_s")
+        "p50_latency_s", "p99_latency_s", "device_losses", "slo_switches",
+        "slo_shedding", "noise_probes", "noise_agreement")
     snap = ServerMetrics().snapshot()
     assert tuple(snap.keys()) == METRIC_KEYS
     assert snap["deadline_miss_rate"] == 0.0      # no div-by-zero when idle
+    assert snap["noise_agreement"] == 1.0         # no probes = no evidence
 
 
 # ------------------------------------------------- over-long requests

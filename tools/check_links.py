@@ -1,0 +1,101 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo docs (no network, no deps).
+
+Walks the given markdown files/directories, extracts inline links and
+images (``[text](target)``), and fails if a relative target does not exist
+on disk — the docs-rot gate CI runs over README.md and docs/.  External
+(``http(s)://``, ``mailto:``) targets are skipped: CI must not flake on
+someone else's uptime.  Anchors are checked against the target file's
+headings (GitHub slug rules, simplified).
+
+  python tools/check_links.py README.md docs
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# inline [text](target) and ![alt](target); ignores ``` fenced blocks below
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation (including
+    backticks), spaces to dashes."""
+    text = heading.strip().lower()
+    text = re.sub(r"[`*_~]", "", text)
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _strip_fences(text: str) -> str:
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def _anchors(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        return {_slug(h) for h in _HEADING.findall(_strip_fences(f.read()))}
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        body = _strip_fences(f.read())
+    base = os.path.dirname(os.path.abspath(path))
+    for target in _LINK.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, anchor = target.partition("#")
+        dest = os.path.normpath(os.path.join(base, ref)) if ref \
+            else os.path.abspath(path)
+        if ref and not os.path.exists(dest):
+            # badge-style links into .github metadata (../../actions/...)
+            # point at the forge UI, not the tree — skip those
+            if "/actions/" in target:
+                continue
+            errors.append(f"{path}: broken link target {target!r}")
+            continue
+        if anchor and dest.endswith(".md") and os.path.exists(dest):
+            if anchor not in _anchors(dest):
+                errors.append(f"{path}: missing anchor {target!r}")
+    return errors
+
+
+def collect(paths: list[str]) -> list[str]:
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".md"))
+        else:
+            files.append(p)
+    return files
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+",
+                    help="markdown files or directories to walk")
+    args = ap.parse_args(argv)
+    files = collect(args.paths)
+    errors = [e for f in files for e in check_file(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
