@@ -98,10 +98,19 @@ def encode_request(req_id: int, stream: np.ndarray,
                   + _pack_bits(stream))
 
 
-def decode_request(payload: bytes) -> tuple[int, np.ndarray, float]:
+def peek_request(payload: bytes) -> tuple[int, int, int, float]:
+    """Request header ``(req_id, T, n_in, slack)`` without unpacking the
+    raster — what the server reads to validate the claimed shape against
+    its model *before* committing to the ``[T, n_in]`` decode, so a
+    well-framed request with a bogus width answers with a REJECT instead
+    of reaching the engine."""
     if len(payload) < _REQ_HEAD.size:
         raise ProtocolError(f"request payload truncated at {len(payload)}B")
-    req_id, t, n_in, slack = _REQ_HEAD.unpack_from(payload)
+    return _REQ_HEAD.unpack_from(payload)
+
+
+def decode_request(payload: bytes) -> tuple[int, np.ndarray, float]:
+    req_id, t, n_in, slack = peek_request(payload)
     return req_id, _unpack_bits(payload[_REQ_HEAD.size:], t, n_in), slack
 
 

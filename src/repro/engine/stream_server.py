@@ -262,7 +262,7 @@ class StreamServer:
                  donate: bool | None = None,
                  noise=None, noise_key=0, noise_probe_every: int = 8,
                  slo: SLOPolicy | None = None,
-                 chaos_hook=None):
+                 chaos_hook=None, on_rejection=None):
         assert backpressure in ("reject", "shed_oldest"), backpressure
         assert overlong in ("reject", "extend"), overlong
         assert queue_capacity > 0
@@ -275,11 +275,17 @@ class StreamServer:
         # the clean model to track prediction agreement (the
         # accuracy-under-noise metric).  0 disables probing.
         self._clean_packed = self.packed
-        self.noise = noise
         if noise is not None and noise.weight_sigma > 0:
             from repro.core.noise import as_noise_key, perturb_packed
             self.packed = perturb_packed(as_noise_key(noise_key),
                                          self.packed, noise)
+        else:
+            # weight_sigma <= 0 applies no perturbation: probing would
+            # shadow-replay the batch through an identical model (always
+            # agreeing) — normalize to "noise off" so the gate in
+            # _dispatch means "a perturbed model is actually serving"
+            noise = None
+        self.noise = noise
         self.noise_probe_every = noise_probe_every
         # SLO controller state: the configured backpressure/overlong are the
         # "extend-biased" baseline it restores to after a shed episode
@@ -313,6 +319,13 @@ class StreamServer:
         # server never accumulates input copies across dispatches.  CPU XLA
         # has no donation, hence the backend-aware default.
         self.donate = br.should_donate(donate)
+        # on_rejection(Rejection) fires synchronously for every rejection
+        # as it happens — the delivery channel for transports that must
+        # answer displaced clients (the socket layer's REJECT frames).
+        # The `rejections` deque below is a bounded *metrics* window and
+        # can overflow under sustained shedding; consumers that may not
+        # lose a record subscribe here instead of scraping it.
+        self.on_rejection = on_rejection
         self.metrics = ServerMetrics()
         # execute_plan records / rejection log, last METRICS_WINDOW entries
         self.telemetry: collections.deque = \
@@ -341,6 +354,8 @@ class StreamServer:
             self.metrics.shed += 1
         else:
             self.metrics.rejected += 1
+        if self.on_rejection is not None:
+            self.on_rejection(rej)
 
     def _shed_oldest(self) -> None:
         """Backpressure by displacement: drop the oldest pending request
@@ -374,8 +389,12 @@ class StreamServer:
             f"arrival_t {arrival_t} is in the future (now={now})"
         self.metrics.submitted += 1
         stream = np.asarray(stream, dtype=np.float32)
-        assert stream.ndim == 2 and stream.shape[1] == self.packed.n_in, \
-            f"expected [T, {self.packed.n_in}], got {stream.shape}"
+        # a real raise, not an assert: submit is the boundary where
+        # external traffic enters, so the shape check must survive -O and
+        # give transports a typed error to map to a rejection
+        if stream.ndim != 2 or stream.shape[1] != self.packed.n_in:
+            raise ValueError(
+                f"expected [T, {self.packed.n_in}], got {stream.shape}")
         t_len = stream.shape[0]
         if t_len == 0:
             self._reject(None, "empty", "zero-length spike train")

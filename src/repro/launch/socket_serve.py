@@ -69,8 +69,15 @@ class SpikeSocketServer:
     """
 
     def __init__(self, model, *, policy: BucketPolicy,
-                 host: str = "127.0.0.1", port: int = 0, **server_kwargs):
-        self.server = StreamServer(model, policy=policy, **server_kwargs)
+                 host: str = "127.0.0.1", port: int = 0,
+                 max_request_steps: int = 4096, **server_kwargs):
+        self.server = StreamServer(model, policy=policy,
+                                   on_rejection=self._on_rejection,
+                                   **server_kwargs)
+        # untrusted-input bound: a protocol-valid REQUEST header may claim
+        # any u32 T; cap it before unpacking (T * n_in float32 blows up
+        # ~32x over the wire size) and before it reaches admission
+        self.max_request_steps = max_request_steps
         self._listener = socket.create_server((host, port))
         self._listener.setblocking(False)
         self.address = self._listener.getsockname()
@@ -78,7 +85,12 @@ class SpikeSocketServer:
         self._sel.register(self._listener, selectors.EVENT_READ, None)
         self._conns: dict[socket.socket, _Conn] = {}
         self._owner: dict[int, tuple[_Conn, int]] = {}  # rid -> (conn, req_id)
-        self._rej_seen = 0
+        # rejections arrive via the server's on_rejection callback, an
+        # unbounded outbox: post-admission sheds are answered from here by
+        # _drain_new_rejections, never inferred from the bounded metrics
+        # deque (which overflows under sustained shed-mode load)
+        self._rej_outbox: list = []
+        self._last_inline_rej = None
         self._stop = threading.Event()
         self.served = 0
 
@@ -107,18 +119,20 @@ class SpikeSocketServer:
         self._owner = {rid: (c, q) for rid, (c, q) in self._owner.items()
                        if c is not conn}
 
+    def _on_rejection(self, rej) -> None:
+        """StreamServer's rejection callback (fires inside ``submit``)."""
+        if rej.rid is None:
+            self._last_inline_rej = rej  # answered by _on_request's caller
+        else:
+            self._rej_outbox.append(rej)
+
     def _drain_new_rejections(self) -> None:
-        """Answer every rejection recorded since the last drain — including
-        queued requests shed by backpressure after admission."""
-        srv = self.server
-        total = srv.metrics.rejected + srv.metrics.shed
-        new = total - self._rej_seen
-        if new <= 0:
+        """Answer every post-admission rejection (queued requests shed by
+        backpressure) accumulated in the outbox since the last drain."""
+        if not self._rej_outbox:
             return
-        self._rej_seen = total
-        for rej in list(srv.rejections)[-new:]:
-            if rej.rid is None:
-                continue            # pre-admission: answered at submit time
+        outbox, self._rej_outbox = self._rej_outbox, []
+        for rej in outbox:
             owner = self._owner.pop(rej.rid, None)
             if owner is not None:
                 conn, req_id = owner
@@ -140,12 +154,27 @@ class SpikeSocketServer:
         if frame.kind != ingest.KIND_REQUEST:
             raise ingest.ProtocolError(
                 f"client sent frame kind {frame.kind}, expected REQUEST")
-        req_id, stream, slack = ingest.decode_request(frame.payload)
+        # validate the claimed shape BEFORE unpacking or submitting: a
+        # well-framed request with the wrong raster width (or an absurd T)
+        # must answer with a REJECT, not raise out of the event loop and
+        # kill serving for every other connected client
+        req_id, t, n_in, _ = ingest.peek_request(frame.payload)
+        want = self.server.packed.n_in
+        if n_in != want:
+            self._send(conn, ingest.encode_rejection(
+                req_id, f"bad_shape: raster width {n_in} != model "
+                        f"n_in {want}"))
+            return
+        if t > self.max_request_steps:
+            self._send(conn, ingest.encode_rejection(
+                req_id, f"overlong: {t} steps > socket cap "
+                        f"{self.max_request_steps}"))
+            return
+        _, stream, slack = ingest.decode_request(frame.payload)
         rid = self.server.submit(
             stream, slack=None if math.isinf(slack) else slack)
         if rid is None:
-            rej = self.server.rejections[-1]
-            self._rej_seen += 1
+            rej = self._last_inline_rej
             self._send(conn, ingest.encode_rejection(
                 req_id, f"{rej.reason}: {rej.detail}"))
             return
@@ -168,7 +197,15 @@ class SpikeSocketServer:
             self._drop(conn)
             return
         if not chunk:
-            conn.draining = True    # EOF: finish its in-flight, then close
+            # EOF: finish its in-flight, then close.  Unregister the read
+            # side now — a half-closed socket is permanently readable, so
+            # leaving it in the selector busy-spins select() and keeps
+            # refreshing last_activity, starving the idle-flush path the
+            # connection needs to ever drain.  The write side stays open
+            # for the pending results.
+            conn.draining = True
+            with contextlib.suppress(KeyError):
+                self._sel.unregister(sock)
             return
         try:
             for frame in conn.decoder.feed(chunk):

@@ -11,6 +11,7 @@ bit-exact against the single-device engine.
 """
 
 import os
+import socket
 import subprocess
 import sys
 
@@ -264,3 +265,84 @@ def test_socket_server_round_trip_is_bit_exact(rng):
         assert np.array_equal(cli.results[i], alone.out_spikes[0]), \
             f"socket result {i} != run_batched"
     assert srv.server.metrics.snapshot()["completed"] == len(streams)
+
+
+def test_socket_malformed_request_rejected_server_survives(rng):
+    """A protocol-valid REQUEST whose raster width disagrees with the
+    model's n_in (or whose claimed T is absurd) must answer with a REJECT
+    frame — not raise out of the event loop and kill serving for every
+    other client.  A good request after the malformed ones still serves
+    bit-exact."""
+    from repro.engine.serving import BucketPolicy
+    from repro.launch.socket_serve import (SpikeClient, SpikeSocketServer,
+                                           serving_thread)
+    model = _model(rng)
+    packed = model.pack()
+    srv = SpikeSocketServer(
+        packed, policy=BucketPolicy(batch_sizes=(1,), time_steps=(10,)),
+        port=0, max_request_steps=64)
+    host, port = srv.address
+    good = (rng.random((5, packed.n_in)) < 0.3).astype(np.float32)
+    with serving_thread(srv, max_requests=1):
+        cli = SpikeClient(host, port, timeout=60)
+        bad_width = cli.send(
+            (rng.random((5, packed.n_in + 3)) < 0.3).astype(np.float32))
+        too_long = cli.send(
+            (rng.random((65, packed.n_in)) < 0.3).astype(np.float32))
+        ok = cli.send(good)
+        cli.recv_all()
+        cli.close()
+    assert "bad_shape" in cli.rejections[bad_width]
+    assert "overlong" in cli.rejections[too_long]
+    alone = run_batched(packed, good[None], with_stats=False)
+    assert np.array_equal(cli.results[ok], alone.out_spikes[0])
+
+
+def test_socket_halfclose_drains_via_idle_flush(rng):
+    """A client that sends one best-effort request and half-closes its
+    write side (EOF at the server) still gets its result: EOF unregisters
+    the read side, so the permanently-readable half-closed socket cannot
+    busy-spin select() and starve the idle-flush path the pending request
+    needs to dispatch."""
+    from repro.engine.serving import BucketPolicy
+    from repro.launch.socket_serve import (SpikeClient, SpikeSocketServer,
+                                           serving_thread)
+    model = _model(rng)
+    packed = model.pack()
+    srv = SpikeSocketServer(
+        packed, policy=BucketPolicy(batch_sizes=(4,), time_steps=(10,)),
+        port=0)
+    host, port = srv.address
+    s = (rng.random((6, packed.n_in)) < 0.3).astype(np.float32)
+    with serving_thread(srv, max_requests=1, idle_flush_s=0.05):
+        cli = SpikeClient(host, port, timeout=60)
+        rid = cli.send(s)
+        cli.sock.shutdown(socket.SHUT_WR)   # EOF at the server
+        cli.recv_all()
+        cli.close()
+    alone = run_batched(packed, s[None], with_stats=False)
+    assert np.array_equal(cli.results[rid], alone.out_spikes[0])
+
+
+def test_socket_shed_rejections_delivered_from_outbox(rng):
+    """A queued request displaced by shed_oldest backpressure after
+    admission is answered with a REJECT frame via the server's rejection
+    callback outbox, and the survivors still serve."""
+    from repro.engine.serving import BucketPolicy
+    from repro.launch.socket_serve import (SpikeClient, SpikeSocketServer,
+                                           serving_thread)
+    model = _model(rng)
+    packed = model.pack()
+    srv = SpikeSocketServer(
+        packed, policy=BucketPolicy(batch_sizes=(4,), time_steps=(10,)),
+        port=0, queue_capacity=2, backpressure="shed_oldest")
+    host, port = srv.address
+    streams = [(rng.random((4, packed.n_in)) < 0.3).astype(np.float32)
+               for _ in range(3)]
+    with serving_thread(srv, max_requests=2, idle_flush_s=0.2):
+        cli = SpikeClient(host, port, timeout=60)
+        rids = [cli.send(s) for s in streams]
+        cli.recv_all()
+        cli.close()
+    assert "shed" in cli.rejections[rids[0]]
+    assert set(cli.results) == {rids[1], rids[2]}

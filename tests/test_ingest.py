@@ -44,6 +44,17 @@ def test_request_default_slack_is_inf(rng):
     assert math.isinf(slack)
 
 
+def test_peek_request_reads_header_without_unpacking(rng):
+    """The server validates the claimed [T, n_in] against its model before
+    committing to the decode; peek must agree with the full decode and
+    still reject truncated headers."""
+    frame = ingest.FrameDecoder().feed(
+        ingest.encode_request(3, _raster(rng, 5, 9), 1.5))[0]
+    assert ingest.peek_request(frame.payload) == (3, 5, 9, 1.5)
+    with pytest.raises(ingest.ProtocolError):
+        ingest.peek_request(frame.payload[:8])
+
+
 def test_result_roundtrip_bit_exact(rng):
     out = _raster(rng, 9, 10)
     frame = ingest.FrameDecoder().feed(ingest.encode_result(42, out))[0]

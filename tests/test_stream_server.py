@@ -285,6 +285,49 @@ def test_empty_stream_rejected(rng, packed):
     assert server.metrics.snapshot()["rejected"] == 1
 
 
+def test_submit_bad_width_raises_typed_error(rng, packed):
+    """submit is where external traffic enters: a raster with the wrong
+    width raises ValueError (not a -O-strippable assert) so transports can
+    map it to a rejection instead of dying."""
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock())
+    with pytest.raises(ValueError, match=f"expected \\[T, {N_IN}\\]"):
+        server.submit(np.zeros((4, N_IN + 1), np.float32))
+
+
+def test_rejection_callback_sees_every_rejection(rng, packed):
+    """on_rejection fires synchronously for pre-admission rejects and
+    post-admission sheds alike — the unbounded delivery channel the socket
+    layer answers REJECT frames from."""
+    seen = []
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock(),
+                          queue_capacity=2, backpressure="shed_oldest",
+                          on_rejection=seen.append)
+    rids = [server.submit(s) for s in _streams(rng, [3, 3, 3])]
+    server.submit(np.zeros((0, N_IN), np.float32))    # pre-admission reject
+    assert [(r.reason, r.rid) for r in seen] == \
+        [("shed", rids[0]), ("empty", None)]
+    assert list(server.rejections) == seen            # same records, ordered
+
+
+def test_zero_sigma_noise_normalized_to_off(rng, packed):
+    """AnalogNoise(weight_sigma=0) applies no perturbation, so the server
+    must treat it as noise-off: no shadow probes of identical models, and
+    the served model IS the clean model."""
+    from repro.core.noise import AnalogNoise
+    server = StreamServer(packed, policy=_policy(), clock=VirtualClock(),
+                          noise=AnalogNoise(weight_sigma=0.0,
+                                            leak_mismatch=0.1),
+                          noise_probe_every=1)
+    assert server.noise is None
+    assert server.packed is server._clean_packed
+    for s in _streams(rng, [3, 4]):
+        server.submit(s)
+    server.flush()
+    snap = server.metrics.snapshot()
+    assert snap["completed"] == 2
+    assert snap["noise_probes"] == 0 and snap["noise_agreement"] == 1.0
+
+
 # -------------------------------------------------------- jit-cache bound
 
 def test_async_trace_bound_and_hot_replay(rng, packed):
