@@ -6,12 +6,23 @@ Layers are built as :mod:`repro.core.layers` specs — the post-conv-support
 model path — so the bench measures exactly what ``map_model`` solves,
 including a shared-weight conv case (one A-SYN word, many MEM_S&N rows).
 
-  PYTHONPATH=src python benchmarks/mapping_bench.py [--smoke]
+With ``--out`` it additionally maps the menage_paper conv topology on
+Accel_2 and writes ``BENCH_mapping.json``: synapse-compression ratio
+(``map_model(compress=True)``), rounds-per-timestep, and autotuned-vs-
+default throughput on the bucketed engine.  Gates (CI fails loudly):
+
+  * compression shrinks the allocated A-SYN words and is bit-exact;
+  * the autotuned grid never regresses rounds-per-timestep;
+  * autotuned throughput stays within 2x of the default grid's.
+
+  PYTHONPATH=src python benchmarks/mapping_bench.py [--smoke] \
+      [--out BENCH_mapping.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -84,17 +95,129 @@ def cases(smoke: bool):
                     fanout_slack=None)
 
 
+def _bucketed_events_per_s(model, streams) -> float:
+    """Hot-pass throughput of ``run_bucketed`` (events served per second):
+    first pass warms the jit caches, second is measured."""
+    from repro.engine import run_bucketed
+    run_bucketed(model, streams, with_stats=False)
+    t0 = time.perf_counter()
+    res = run_bucketed(model, streams, with_stats=False)
+    dt = time.perf_counter() - t0
+    events = sum(float(s.sum()) for s in streams)
+    assert res, "bucketed engine returned no results"
+    return events / max(dt, 1e-9)
+
+
+def bench_compression(smoke: bool, seed: int = 0) -> dict:
+    """Map the menage_paper conv topology (full input resolution, or
+    reduced under ``--smoke``) on Accel_2: compression ratio, grid
+    autotuning, and throughput — with the correctness gates inline."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs.menage_paper import CIFAR_CONV
+    from repro.core.accelerator import map_model
+    from repro.core.energy import ACCEL_2
+    from repro.core.mapping import autotune_grid
+    from repro.engine import run_batched
+    from repro.snn.conv import init_conv_snn, layer_specs
+
+    cfg = dataclasses.replace(CIFAR_CONV, in_shape=(2, 8, 8),
+                              num_steps=10) if smoke else CIFAR_CONV
+    params = init_conv_snn(jax.random.key(seed), cfg)
+    specs = layer_specs(params, cfg)
+    spec = ACCEL_2
+
+    t0 = time.perf_counter()
+    plain = map_model(specs, spec)
+    t_map = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    comp = map_model(specs, spec, compress=True)
+    t_comp = time.perf_counter() - t0
+
+    raw_words = sum(l.sram_bytes for l in plain.layers)
+    comp_words = sum(l.sram_bytes for l in comp.layers)
+    assert comp_words < raw_words, \
+        f"compression gate: {comp_words} words !< {raw_words}"
+
+    rng = np.random.default_rng(seed + 1)
+    spikes = (rng.random((4, cfg.num_steps, cfg.n_in)) < 0.2
+              ).astype(np.float32)
+    r_plain = run_batched(plain, spikes, with_stats=False)
+    r_comp = run_batched(comp, spikes, with_stats=False)
+    assert np.array_equal(r_plain.out_spikes, r_comp.out_spikes), \
+        "compression gate: compressed out_spikes differ from uncompressed"
+
+    # grid autotuning (compressed) over a pinned candidate set — the full
+    # divisor sweep re-solves the ILP per grid, too slow for a smoke lane
+    m0, n0 = spec.n_engines, spec.n_caps
+    tuned = autotune_grid(specs, spec, compress=True,
+                          candidates=[(m0, n0), (2 * m0, n0 // 2),
+                                      (m0 // 2, 2 * n0)])
+    assert tuned.best.rounds_per_timestep <= \
+        tuned.default.rounds_per_timestep, "autotune gate: rounds regressed"
+
+    streams = [(rng.random((int(t), cfg.n_in)) < 0.2).astype(np.float32)
+               for t in rng.integers(cfg.num_steps // 2,
+                                     cfg.num_steps + 1, size=8)]
+    tput_default = _bucketed_events_per_s(plain, streams)
+    tput_tuned = _bucketed_events_per_s(tuned.model, streams)
+    # generous gate: the tuned grid reshapes jit tile geometry, so allow
+    # noise — but a >2x collapse is a real regression
+    assert tput_tuned >= 0.5 * tput_default, \
+        f"throughput gate: tuned {tput_tuned:.0f} ev/s < " \
+        f"half of default {tput_default:.0f} ev/s"
+
+    row = {
+        "config": "menage_paper.CIFAR_CONV" + ("@2x8x8" if smoke else ""),
+        "spec": spec.name,
+        "n_weight_words_raw": int(raw_words),
+        "n_weight_words_compressed": int(comp_words),
+        "compression": comp.compression.as_dict(),
+        "map_ms": t_map * 1e3, "map_compress_ms": t_comp * 1e3,
+        "rounds_per_timestep_default": tuned.default.rounds_per_timestep,
+        "rounds_per_timestep_tuned": tuned.best.rounds_per_timestep,
+        "grid_default": [m0, n0],
+        "grid_tuned": [tuned.best.n_engines, tuned.best.n_caps],
+        "grid_scores": [s.as_dict() for s in tuned.scores],
+        "events_per_s_default": tput_default,
+        "events_per_s_tuned": tput_tuned,
+    }
+    print(f"mapping/compress_{row['config']},"
+          f"words={raw_words}->{comp_words},"
+          f"ratio={comp.compression.ratio:.2f},"
+          f"rounds={row['rounds_per_timestep_default']}->"
+          f"{row['rounds_per_timestep_tuned']},"
+          f"grid={m0}x{n0}->{tuned.best.n_engines}x{tuned.best.n_caps},"
+          f"ev_per_s={tput_default:.0f}->{tput_tuned:.0f}")
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="two small cases (CI drift guard)")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_mapping.json (compression + autotune "
+                         "+ throughput on the menage_paper conv config)")
     args = ap.parse_args()
+    rows = []
     for r in cases(args.smoke):
         gap = r["ilp_assigned"] - r["greedy_assigned"]
+        rows.append(r)
         print(f"mapping/{r['size']},ilp_ms={r['ilp_ms']:.1f},"
               f"greedy_ms={r['greedy_ms']:.1f},"
               f"assigned_gap={gap},"
               f"rows_ilp={r['ilp_rows']},rows_greedy={r['greedy_rows']}")
+    if args.out:
+        comp = bench_compression(args.smoke)
+        blob = {"bench": "mapping", "smoke": args.smoke,
+                "solvers": rows, "compression": comp}
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

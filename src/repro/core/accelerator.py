@@ -25,10 +25,11 @@ from repro.core.energy import (FRAME_CYCLES, AcceleratorSpec, EnergyReport,
                                energy_model)
 from repro.core.layers import Conv2d, Dense, LayerSpec, as_layer_spec
 from repro.core.lif import LIFParams
-from repro.core.mapping import MappingProblem, MappingSolution, solve_mapping
-from repro.core.memories import (DispatchStats, MemTables,
-                                 build_event_memories, dispatch_simulate,
-                                 mem_sn_utilization)
+from repro.core.mapping import (MappingError, MappingProblem, MappingSolution,
+                                solve_mapping)
+from repro.core.memories import (DispatchStats, MemTables, WeightCompression,
+                                 build_event_memories, compress_weight_words,
+                                 dispatch_simulate, mem_sn_utilization)
 from repro.core.quant import quantize_symmetric
 
 
@@ -78,6 +79,11 @@ class MappedModel:
     spec: AcceleratorSpec
     layers: list[MappedLayer]
     lif: LIFParams
+    # set by map_model(compress=True): the cross-round/cross-layer shared
+    # dictionary of unique quantized A-SYN words (every round's
+    # MemTables.weight_ptr indexes it) + the compression accounting
+    weight_dict: np.ndarray | None = None
+    compression: WeightCompression | None = None
 
     def pack(self, block_d: int | None = None):
         """Pack into the batched JAX engine's pytree representation (see
@@ -94,7 +100,7 @@ class MappedModel:
 def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
               lif: LIFParams = LIFParams(), quant_bits: int = 8,
               fanout: int | None = None,
-              method: str = "auto") -> MappedModel:
+              method: str = "auto", compress: bool = False) -> MappedModel:
     """Algorithm 1 steps 3-5: quantize, ILP-map, build config memories.
 
     weights: list of layer specs, one per layer — bare ``(n_in, n_out)``
@@ -105,17 +111,27 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
     pointing at it) — the SRAM budget check counts unique kernel bytes, not
     unrolled synapses.  Each layer must fit one MX-NEURACORE's weight SRAM;
     layers wider than M*N run in multiple capacitor-reassignment rounds.
+
+    ``compress=True`` turns on the two-level synapse compression
+    (arXiv:2112.07019): per-engine *value* dedup inside
+    :func:`build_event_memories` (identical quantized words on one engine
+    share a slot) plus the cross-round/cross-layer shared word dictionary
+    (:func:`compress_weight_words`).  Execution is bit-exact either way —
+    only the allocation accounting (``n_weight_words`` / ``sram_bytes``),
+    the weight-address field width, and the engine's replay route change;
+    the SRAM fit is then checked against the compressed allocation.
     """
-    assert len(weights) <= spec.n_cores, \
-        f"model has {len(weights)} layers but {spec.name} has {spec.n_cores} cores"
+    if len(weights) > spec.n_cores:
+        raise MappingError(f"model has {len(weights)} layers but "
+                           f"{spec.name} has {spec.n_cores} cores")
     layers = []
     prev: LayerSpec | None = None
     for li, layer_in in enumerate(weights):
         ls = as_layer_spec(layer_in)
-        if prev is not None:
-            assert ls.n_src == prev.n_dest, \
-                f"layer {li} expects {ls.n_src} inputs but layer {li-1} " \
-                f"produces {prev.n_dest}"
+        if prev is not None and ls.n_src != prev.n_dest:
+            raise ValueError(
+                f"layer {li} expects {ls.n_src} inputs but layer {li-1} "
+                f"produces {prev.n_dest}")
         prev = ls
         # quantize the STORED tensor (kernel for conv, matrix for dense) so
         # synapses sharing an SRAM word carry identical dequantized values
@@ -124,9 +140,12 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
         ls_q = ls.with_stored(np.asarray(qt.dequantize()) * (stored != 0))
         nz_bytes = ls_q.unique_weight_bytes   # 8-bit -> 1 byte per SRAM word
         # necessary condition, checked before the (expensive) ILP; the
-        # sufficient physical-allocation check follows the rounds loop
-        assert nz_bytes <= spec.weight_mem_bytes, \
-            f"layer {li}: {nz_bytes} B of weights > {spec.weight_mem_bytes} B SRAM"
+        # sufficient physical-allocation check follows the rounds loop.
+        # (Skipped under compression: value dedup can fit a layer whose
+        # unique-byte count alone overflows the budget.)
+        if not compress and nz_bytes > spec.weight_mem_bytes:
+            raise MappingError(f"layer {li}: {nz_bytes} B of weights > "
+                               f"{spec.weight_mem_bytes} B SRAM")
         w_q = np.asarray(ls_q.unroll())
         share = ls_q.share_ids()
         n_src, n_dest = ls_q.n_src, ls_q.n_dest
@@ -141,29 +160,40 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
             sol = solve_mapping(prob, method=method)
             sol.check(prob)
             if sol.n_assigned == 0:
-                raise AssertionError(
+                raise MappingError(
                     f"layer {li}: ILP cannot assign any of the remaining "
                     f"{len(remaining)} neurons (fan-out too tight)")
             tables = build_event_memories(
                 w_sub, sol, spec.n_engines, spec.n_caps,
-                share_ids=None if share is None else share[:, remaining])
+                share_ids=None if share is None else share[:, remaining],
+                dedup=compress)
             rounds.append(MappedRound(neuron_ids=remaining.copy(),
                                       mapping=sol, tables=tables))
             remaining = remaining[sol.engine < 0]
-        # the hardware-fit guarantee: words PHYSICALLY allocated.  A shared
-        # tap is stored once per engine per round that references it (each
-        # engine's A-SYN slice is private), so this exceeds nz_bytes for
-        # conv; for dense it is the assigned-synapse count (<= nz_bytes).
-        sram_bytes = sum(r.tables.n_weight_words for r in rounds)
-        assert sram_bytes <= spec.weight_mem_bytes, \
-            f"layer {li}: mapping stores {sram_bytes} B across " \
-            f"{len(rounds)} round(s) > {spec.weight_mem_bytes} B SRAM " \
-            f"({nz_bytes} B unique)"
         layers.append(MappedLayer(w_q=w_q, rounds=rounds,
                                   n_src=n_src, n_dest=n_dest,
-                                  layer_spec=ls_q, weight_bytes=nz_bytes,
-                                  sram_bytes=sram_bytes))
-    return MappedModel(spec=spec, layers=layers, lif=lif)
+                                  layer_spec=ls_q, weight_bytes=nz_bytes))
+    weight_dict = None
+    compression = None
+    if compress:
+        compression = compress_weight_words(
+            [r.tables for layer in layers for r in layer.rounds])
+        weight_dict = layers[0].rounds[0].tables.weight_dict if layers else None
+    for li, layer in enumerate(layers):
+        # the hardware-fit guarantee: words PHYSICALLY allocated.  A shared
+        # tap is stored once per engine per round that references it (each
+        # engine's A-SYN slice is private), so this exceeds weight_bytes for
+        # conv; for dense it is the assigned-synapse count.  Compressed:
+        # n_weight_words counts only words newly contributed to the shared
+        # dictionary, so the budget buys strictly bigger models.
+        layer.sram_bytes = sum(r.tables.n_weight_words for r in layer.rounds)
+        if layer.sram_bytes > spec.weight_mem_bytes:
+            raise MappingError(
+                f"layer {li}: mapping stores {layer.sram_bytes} B across "
+                f"{len(layer.rounds)} round(s) > {spec.weight_mem_bytes} B "
+                f"SRAM ({layer.weight_bytes} B unique)")
+    return MappedModel(spec=spec, layers=layers, lif=lif,
+                       weight_dict=weight_dict, compression=compression)
 
 
 @dataclasses.dataclass

@@ -84,11 +84,13 @@ class Conv2d:
 
     def __post_init__(self):
         c_out, c_in, kh, kw = self.kernel.shape
-        assert c_in == self.in_shape[0], \
-            f"kernel expects {c_in} input channels, input has {self.in_shape[0]}"
+        if c_in != self.in_shape[0]:
+            raise ValueError(f"kernel expects {c_in} input channels, "
+                             f"input has {self.in_shape[0]}")
         oh, ow = self.out_shape[1:]
-        assert oh > 0 and ow > 0, \
-            f"conv collapses {self.in_shape} to {self.out_shape}"
+        if oh <= 0 or ow <= 0:
+            raise ValueError(
+                f"conv collapses {self.in_shape} to {self.out_shape}")
 
     @property
     def out_shape(self) -> tuple[int, int, int]:
@@ -189,7 +191,8 @@ def as_layer_spec(layer: "np.ndarray | LayerSpec") -> LayerSpec:
     if isinstance(layer, (Dense, Conv2d)):
         return layer
     arr = np.asarray(layer)
-    assert arr.ndim == 2, \
-        f"bare weight arrays must be 2-D (n_in, n_out); got {arr.shape} — " \
-        f"wrap 4-D kernels in Conv2d(kernel, in_shape, stride, padding)"
+    if arr.ndim != 2:
+        raise ValueError(
+            f"bare weight arrays must be 2-D (n_in, n_out); got {arr.shape} "
+            f"— wrap 4-D kernels in Conv2d(kernel, in_shape, stride, padding)")
     return Dense(w=arr)

@@ -1,4 +1,5 @@
 from repro.core.mapping.ilp import (  # noqa: F401
+    MappingError,
     MappingProblem,
     MappingSolution,
     solve_mapping,
@@ -8,3 +9,10 @@ from repro.core.mapping.ilp import (  # noqa: F401
     solve_mapping_bruteforce,
 )
 from repro.core.mapping.maxflow import max_flow_assignment  # noqa: F401
+from repro.core.mapping.autotune import (  # noqa: F401
+    AutotuneResult,
+    GridScore,
+    autotune_grid,
+    candidate_grids,
+    estimate_cycles,
+)

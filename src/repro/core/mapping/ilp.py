@@ -32,9 +32,19 @@ import contextlib
 import dataclasses
 import itertools
 import os
+import warnings
 
 import numpy as np
 from scipy.optimize import Bounds, LinearConstraint, milp
+
+
+class MappingError(RuntimeError):
+    """A mapping could not be produced or violates the paper's constraints.
+
+    Raised — never ``assert``-ed, so ``python -O`` cannot strip the check —
+    when a solver returns no feasible incumbent, when a solution fails
+    :meth:`MappingSolution.check`, or when ``map_model`` cannot fit a layer
+    (SRAM budget, unassignable neurons)."""
 
 
 @contextlib.contextmanager
@@ -79,8 +89,12 @@ class MappingProblem:
         return self.conn.shape[0]
 
     def validate(self) -> None:
-        assert self.conn.shape == (self.n_src, self.n_dest)
-        assert self.fanout.shape == (self.n_src,)
+        if self.conn.shape != (self.n_src, self.n_dest):
+            raise ValueError(f"conn shape {self.conn.shape} != "
+                             f"({self.n_src}, {self.n_dest})")
+        if self.fanout.shape != (self.n_src,):
+            raise ValueError(f"fanout shape {self.fanout.shape} != "
+                             f"({self.n_src},)")
 
     @staticmethod
     def from_weights(w: np.ndarray, n_engines: int, n_caps: int,
@@ -105,21 +119,34 @@ class MappingSolution:
     n_assigned: int
     objective: int          # paper's (4): number of unassigned neurons
     solver: str
+    mip_gap: float = 0.0    # HiGHS relative optimality gap of the accepted
+                            # incumbent; 0.0 = proven optimal (or not an ILP)
 
     def check(self, p: MappingProblem, require_all: bool = False) -> None:
-        """Assert constraints (5)-(7) hold."""
+        """Verify constraints (5)-(7) hold; raises :class:`MappingError`
+        (a real exception — this is a load-bearing correctness gate, not a
+        debugging aid ``python -O`` may strip)."""
         assigned = self.engine >= 0
         # (6) unique by construction (one entry per i); capacitor uniqueness:
         for j in range(p.n_engines):
             caps = self.capacitor[(self.engine == j)]
-            assert len(caps) == len(set(caps.tolist())), "capacitor reuse in engine"
-            assert len(caps) <= p.n_caps, "engine capacity exceeded"        # (5)
+            if len(caps) != len(set(caps.tolist())):
+                raise MappingError(f"capacitor reuse in engine {j}")
+            if len(caps) > p.n_caps:                                       # (5)
+                raise MappingError(
+                    f"engine {j} capacity exceeded: {len(caps)} > {p.n_caps}")
         for m in range(p.n_src):
             used = int(np.sum(assigned & p.conn[m]))
-            assert used <= p.fanout[m], f"fanout violated for source {m}"   # (7)
-        if require_all:
-            assert assigned.all(), "not all neurons assigned"
-        assert self.n_assigned == int(assigned.sum())
+            if used > p.fanout[m]:                                         # (7)
+                raise MappingError(
+                    f"fanout violated for source {m}: {used} > {p.fanout[m]}")
+        if require_all and not assigned.all():
+            raise MappingError(
+                f"not all neurons assigned: {int((~assigned).sum())} missing")
+        if self.n_assigned != int(assigned.sum()):
+            raise MappingError(
+                f"n_assigned={self.n_assigned} inconsistent with engine "
+                f"vector ({int(assigned.sum())} assigned)")
 
 
 def _expand_engines_to_caps(p: MappingProblem, engine_of: np.ndarray) -> MappingSolution:
@@ -135,6 +162,25 @@ def _expand_engines_to_caps(p: MappingProblem, engine_of: np.ndarray) -> Mapping
     return MappingSolution(engine=engine_of.astype(np.int64), capacitor=cap,
                            n_assigned=n_assigned,
                            objective=p.n_dest - n_assigned, solver="")
+
+
+def _accept_milp(res, solver: str) -> float:
+    """Vet a scipy ``milp`` result: no incumbent is a hard
+    :class:`MappingError`; a time-limit incumbent is accepted (it is
+    feasible) but its HiGHS optimality gap is surfaced — returned for
+    :attr:`MappingSolution.mip_gap` and warned about — instead of being
+    silently passed off as the optimum."""
+    if res.x is None:
+        raise MappingError(
+            f"{solver}: HiGHS found no feasible solution "
+            f"(status {res.status}): {res.message}")
+    gap = float(getattr(res, "mip_gap", 0.0) or 0.0)
+    if res.status != 0 and gap > 0.0:
+        warnings.warn(
+            f"{solver}: accepted a time-limit incumbent with relative "
+            f"optimality gap {gap:.3g} — not proven optimal",
+            RuntimeWarning, stacklevel=3)
+    return gap
 
 
 def solve_mapping_full_ilp(p: MappingProblem, time_limit: float = 60.0) -> MappingSolution:
@@ -188,8 +234,8 @@ def solve_mapping_full_ilp(p: MappingProblem, time_limit: float = 60.0) -> Mappi
                    integrality=np.ones(nvar), bounds=Bounds(0, 1),
                    options={"time_limit": time_limit})
     # status 0 = proven optimal; 1/3 = limit reached with an incumbent —
-    # accept the incumbent (it is feasible; optimality gap reported by HiGHS)
-    assert res.x is not None, f"HiGHS found no feasible solution: {res.message}"
+    # accept the incumbent (feasible) but surface its optimality gap
+    gap = _accept_milp(res, "full_ilp")
     x = np.round(res.x).astype(np.int64).reshape(n1, m_eng, n_cap)
     engine = np.full(n1, -1, dtype=np.int64)
     cap = np.full(n1, -1, dtype=np.int64)
@@ -199,7 +245,8 @@ def solve_mapping_full_ilp(p: MappingProblem, time_limit: float = 60.0) -> Mappi
             engine[i], cap[i] = jk[0]
     n_assigned = int((engine >= 0).sum())
     return MappingSolution(engine=engine, capacitor=cap, n_assigned=n_assigned,
-                           objective=n1 - n_assigned, solver="full_ilp")
+                           objective=n1 - n_assigned, solver="full_ilp",
+                           mip_gap=gap)
 
 
 def solve_mapping_reduced_ilp(p: MappingProblem, time_limit: float = 120.0) -> MappingSolution:
@@ -239,11 +286,11 @@ def solve_mapping_reduced_ilp(p: MappingProblem, time_limit: float = 120.0) -> M
                    constraints=LinearConstraint(a, np.array(lb), np.array(ub)),
                    integrality=np.ones(nvar), bounds=Bounds(0, 1),
                    options={"time_limit": time_limit})
-    assert res.x is not None, f"HiGHS found no feasible solution: {res.message}"
+    gap = _accept_milp(res, "reduced_ilp")
     y = np.round(res.x).astype(np.int64).reshape(n1, m_eng)
     engine = np.where(y.sum(axis=1) > 0, y.argmax(axis=1), -1)
     sol = _expand_engines_to_caps(p, engine)
-    return dataclasses.replace(sol, solver="reduced_ilp")
+    return dataclasses.replace(sol, solver="reduced_ilp", mip_gap=gap)
 
 
 def solve_mapping_greedy(p: MappingProblem) -> MappingSolution:
@@ -273,7 +320,8 @@ def solve_mapping_bruteforce(p: MappingProblem) -> MappingSolution:
     """Exhaustive search over engine choices (None/0..M-1 per neuron).
     Only for tiny instances in tests."""
     p.validate()
-    assert (p.n_engines + 1) ** p.n_dest <= 2_000_000, "instance too large for brute force"
+    if (p.n_engines + 1) ** p.n_dest > 2_000_000:
+        raise ValueError("instance too large for brute force")
     best, best_count = None, -1
     for choice in itertools.product(range(-1, p.n_engines), repeat=p.n_dest):
         eng = np.array(choice, dtype=np.int64)

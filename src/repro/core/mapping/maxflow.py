@@ -17,7 +17,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.mapping.ilp import MappingProblem, MappingSolution, _expand_engines_to_caps
+from repro.core.mapping.ilp import (MappingError, MappingProblem,
+                                    MappingSolution, _expand_engines_to_caps)
 
 
 class Dinic:
@@ -85,8 +86,9 @@ def max_flow_assignment(p: MappingProblem,
     which engines neuron i may use (default: all).  Requires slack fan-out;
     asserts it."""
     p.validate()
-    assert (p.fanout >= p.conn.sum(axis=1)).all(), \
-        "max-flow path requires slack fan-out; use the ILP solver"
+    if not (p.fanout >= p.conn.sum(axis=1)).all():
+        raise MappingError(
+            "max-flow path requires slack fan-out; use the ILP solver")
     n1, m_eng = p.n_dest, p.n_engines
     if allowed is None:
         allowed = np.ones((n1, m_eng), dtype=bool)

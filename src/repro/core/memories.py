@@ -51,7 +51,18 @@ class MemTables:
     n_engines: int
     n_caps: int
     mapping: MappingSolution
-    n_weight_words: int = 0  # A-SYN words actually allocated (across engines)
+    n_weight_words: int = 0  # A-SYN words actually allocated (across engines);
+                             # after compress_weight_words: words this table
+                             # newly contributes to the shared dictionary
+    # physical per-engine word slots (len of each engine's allocation;
+    # invariant under cross-layer compression — pointer-table entries)
+    engine_words: np.ndarray | None = None          # int [M]
+    # cross-round/cross-layer synapse compression (arXiv:2112.07019):
+    # weight_ptr[j, a] indexes the model-shared weight_dict; set by
+    # compress_weight_words, and always satisfies
+    # weight_mem[j, a] == weight_dict[weight_ptr[j, a]] on allocated slots
+    weight_ptr: np.ndarray | None = None            # i32 [M, W]
+    weight_dict: np.ndarray | None = None           # f32 [K], shared object
 
     @property
     def n_rows(self) -> int:
@@ -91,6 +102,24 @@ class MemTables:
                     w[m, i] += self.weight_mem[j, int(self.sn_waddr[r, j])]
         return w
 
+    def _replay_indices(self):
+        """Shared COO replay walk: ``(src, dest_local, engine, waddr)`` per
+        stored synapse, in :meth:`dense_weights` accumulation order."""
+        used = self.e2a_count.sum()
+        if used == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, z, z
+        # build_event_memories lays rows out contiguously in source order
+        starts = np.concatenate([[0], np.cumsum(self.e2a_count)[:-1]])
+        if not (self.e2a_addr == starts).all():
+            raise ValueError(
+                "replay_coo requires source-ordered contiguous MEM_S&N rows")
+        row_src = np.repeat(np.arange(len(self.e2a_count)), self.e2a_count)
+        rr, jj = np.nonzero(self.sn_valid[: len(row_src)])
+        inv = self.inverse_map()
+        dest = inv[jj, self.sn_virt[rr, jj]]
+        return row_src[rr], dest, jj, self.sn_waddr[rr, jj]
+
     def replay_coo(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Replay the tables into COO triplets ``(src, dest_local, weight)``
         — one per stored synapse — in :meth:`dense_weights` accumulation
@@ -99,20 +128,33 @@ class MemTables:
         ``n_src x n_dest`` dense matrix.  Like ``dense_weights`` it is
         derived from the memory *content*, so table corruption still shows
         up as an equivalence failure."""
-        used = self.e2a_count.sum()
-        if used == 0:
-            z = np.zeros(0, dtype=np.int64)
-            return z, z, np.zeros(0, dtype=np.float32)
-        # build_event_memories lays rows out contiguously in source order
-        starts = np.concatenate([[0], np.cumsum(self.e2a_count)[:-1]])
-        assert (self.e2a_addr == starts).all(), \
-            "replay_coo requires source-ordered contiguous MEM_S&N rows"
-        row_src = np.repeat(np.arange(len(self.e2a_count)), self.e2a_count)
-        rr, jj = np.nonzero(self.sn_valid[: len(row_src)])
-        inv = self.inverse_map()
-        dest = inv[jj, self.sn_virt[rr, jj]]
-        vals = self.weight_mem[jj, self.sn_waddr[rr, jj]]
-        return row_src[rr], dest, vals.astype(np.float32)
+        src, dest, jj, waddr = self._replay_indices()
+        vals = self.weight_mem[jj, waddr]
+        return src, dest, vals.astype(np.float32)
+
+    def replay_coo_ptr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """:meth:`replay_coo` through the compression indirection:
+        ``(src, dest_local, widx)`` where ``widx`` indexes the model-shared
+        :attr:`weight_dict` — ``weight_dict[widx]`` equals
+        ``replay_coo()``'s values bit for bit.  The engine gathers the
+        dictionary on device under jit (see
+        :func:`repro.engine.batched_run.pack_model`)."""
+        if self.weight_ptr is None:
+            raise ValueError("tables are not compressed: run "
+                             "compress_weight_words first")
+        src, dest, jj, waddr = self._replay_indices()
+        return src, dest, self.weight_ptr[jj, waddr].astype(np.int64)
+
+    def alloc_words(self) -> np.ndarray:
+        """Per-engine allocated A-SYN word-slot counts: recorded by
+        :func:`build_event_memories`; derived from the referenced addresses
+        for hand-built tables."""
+        if self.engine_words is not None:
+            return np.asarray(self.engine_words, dtype=np.int64)
+        counts = np.zeros(self.n_engines, dtype=np.int64)
+        rr, jj = np.nonzero(self.sn_valid)
+        np.maximum.at(counts, jj, self.sn_waddr[rr, jj] + 1)
+        return counts
 
     def to_jax(self, pad_src: int | None = None,
                pad_rows: int | None = None) -> "PackedTables":
@@ -197,7 +239,8 @@ jax.tree_util.register_dataclass(
 
 def build_event_memories(w: np.ndarray, sol: MappingSolution,
                          n_engines: int, n_caps: int,
-                         share_ids: np.ndarray | None = None) -> MemTables:
+                         share_ids: np.ndarray | None = None,
+                         dedup: bool = False) -> MemTables:
     """Construct MEM_E2A / MEM_S&N / weight SRAM from a pruned weight matrix
     ``w[n_src, n_dest]`` and an ILP mapping solution.
 
@@ -207,6 +250,13 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
     A-SYN SRAM word (one stored kernel tap, many rows reading it), instead
     of each synapse allocating its own word.  ``None`` keeps the dense
     layout: one SRAM word per synapse, bit-identical to the pre-conv path.
+
+    ``dedup`` generalizes the sharing from taps to *values* (the synapse
+    compression of arXiv:2112.07019): any two synapses on the same engine
+    whose quantized words are bit-identical share one A-SYN word, whatever
+    layer structure produced them.  Replay is unchanged bit for bit — the
+    merged words are exactly equal — while ``n_weight_words`` (and the
+    weight-address field width, hence MEM_S&N row bytes) shrinks.
     """
     n_src, n_dest = w.shape
     e2a_count = np.zeros(n_src, dtype=np.int64)
@@ -217,21 +267,34 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
     w_entries: list[list[float]] = [[] for _ in range(n_engines)]
     # per-engine share-id -> allocated SRAM address
     shared_addr: list[dict[int, int]] = [{} for _ in range(n_engines)]
+    # per-engine quantized word value -> allocated SRAM address (dedup)
+    value_addr: list[dict[float, int]] = [{} for _ in range(n_engines)]
 
     def alloc(j: int, m: int, i: int) -> int:
         """SRAM address in engine j for synapse (m, i): fresh word unless
-        the synapse's share id already has one on this engine."""
+        the synapse's share id — or, under ``dedup``, its exact quantized
+        value — already has one on this engine."""
+        v = float(w[m, i])
         sid = -1 if share_ids is None else int(share_ids[m, i])
         if sid >= 0 and sid in shared_addr[j]:
             addr = shared_addr[j][sid]
-            assert w_entries[j][addr] == float(w[m, i]), \
-                "share id maps to conflicting weight values"
+            if w_entries[j][addr] != v:
+                raise ValueError(
+                    f"share id {sid} maps to conflicting weight values "
+                    f"({w_entries[j][addr]} vs {v}) on engine {j}")
+            return addr
+        if dedup and v in value_addr[j]:
+            addr = value_addr[j][v]
+            if sid >= 0:
+                shared_addr[j][sid] = addr
             return addr
         addr = int(w_next[j])
-        w_entries[j].append(float(w[m, i]))
+        w_entries[j].append(v)
         w_next[j] += 1
         if sid >= 0:
             shared_addr[j][sid] = addr
+        if dedup:
+            value_addr[j][v] = addr
         return addr
 
     for m in range(n_src):
@@ -276,7 +339,113 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
         n_caps=n_caps,
         mapping=sol,
         n_weight_words=int(sum(len(e) for e in w_entries)),
+        engine_words=w_next.copy(),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightCompression:
+    """Accounting for the shared-dictionary synapse compression
+    (arXiv:2112.07019 applied to the A-SYN SRAM).
+
+    Physical model: each engine's A-SYN becomes a *pointer table* (one
+    ``ptr_bits``-wide entry per allocated word slot) into a single
+    chip-shared dictionary of unique quantized words.  Three allocation
+    levels are reported:
+
+      synapse_words — one word per stored synapse (no sharing at all; what
+                      the dense pre-conv layout allocates)
+      slot_words    — per-engine slots after tap/value dedup (= pointer
+                      entries; ``build_event_memories`` allocation)
+      dict_words    — unique words K in the cross-round/cross-layer shared
+                      dictionary
+    """
+
+    synapse_words: int
+    slot_words: int
+    dict_words: int
+    ptr_bits: int
+
+    @property
+    def dict_bytes(self) -> int:
+        """8-bit words -> 1 byte each."""
+        return self.dict_words
+
+    @property
+    def ptr_bytes(self) -> int:
+        return (self.slot_words * self.ptr_bits + 7) // 8
+
+    @property
+    def compressed_bytes(self) -> int:
+        return self.dict_bytes + self.ptr_bytes
+
+    @property
+    def ratio(self) -> float:
+        """Word-count compression vs the per-synapse layout."""
+        return self.synapse_words / max(self.dict_words, 1)
+
+    def as_dict(self) -> dict:
+        return {"synapse_words": self.synapse_words,
+                "slot_words": self.slot_words,
+                "dict_words": self.dict_words,
+                "ptr_bits": self.ptr_bits,
+                "dict_bytes": self.dict_bytes,
+                "ptr_bytes": self.ptr_bytes,
+                "compressed_bytes": self.compressed_bytes,
+                "ratio": self.ratio}
+
+
+def compress_weight_words(tables: "list[MemTables]") -> WeightCompression:
+    """Deduplicate identical quantized A-SYN words across engines, rounds,
+    and layers behind one shared dictionary.
+
+    Walks the given tables in order (map_model passes every round of every
+    layer), assigns each distinct word value a dictionary index at first
+    sight, and attaches to each table: ``weight_ptr`` (the per-slot
+    indirection) and the shared ``weight_dict`` array.  Each table's
+    ``n_weight_words`` becomes the number of words it *newly* contributes —
+    so ``sum(n_weight_words) == dict_words`` across the model and a layer
+    whose words all appeared earlier in the chain costs zero new words.
+
+    Replay stays bit-exact by construction: ``weight_dict[weight_ptr]``
+    reproduces ``weight_mem`` on every allocated slot (tested), and no
+    MEM_S&N content changes — only the accounting and the engine's replay
+    route (:meth:`MemTables.replay_coo_ptr`) go through the indirection.
+    """
+    index: dict[float, int] = {}
+    values: list[float] = []
+    synapse_words = 0
+    slot_words = 0
+    new_counts: list[int] = []
+    ptrs: list[np.ndarray] = []
+    for tb in tables:
+        words = tb.alloc_words()
+        synapse_words += int(tb.sn_valid.sum())
+        slot_words += int(words.sum())
+        new = 0
+        ptr = np.zeros(tb.weight_mem.shape, dtype=np.int32)
+        for j in range(tb.n_engines):
+            for a in range(int(words[j])):
+                v = float(tb.weight_mem[j, a])
+                idx = index.get(v)
+                if idx is None:
+                    idx = len(values)
+                    index[v] = idx
+                    values.append(v)
+                    new += 1
+                ptr[j, a] = idx
+        new_counts.append(new)
+        ptrs.append(ptr)
+    weight_dict = np.asarray(values, dtype=np.float32)
+    for tb, ptr, new in zip(tables, ptrs, new_counts):
+        tb.weight_ptr = ptr
+        tb.weight_dict = weight_dict
+        tb.n_weight_words = new
+    k = max(len(values), 1)
+    return WeightCompression(
+        synapse_words=synapse_words, slot_words=slot_words,
+        dict_words=len(values),
+        ptr_bits=max(int(np.ceil(np.log2(max(k, 2)))), 1))
 
 
 @dataclasses.dataclass

@@ -90,6 +90,14 @@ def perturb_packed(key: jax.Array, packed, noise: AnalogNoise):
             if rnd.w_dense is not None:
                 rounds.append(_dc.replace(
                     rnd, w_dense=perturb_weights(k, rnd.w_dense, noise)))
+            elif rnd.coo_widx is not None:
+                # compressed round: the dictionary is a digital artifact but
+                # each *synapse dispatch* runs through its own C2C ladder, so
+                # mismatch is per-synapse — materialize the values through
+                # the indirection, perturb, and drop the now-stale pointer
+                val = perturb_weights(
+                    k, packed.weight_dict[rnd.coo_widx], noise)
+                rounds.append(_dc.replace(rnd, coo_val=val, coo_widx=None))
             else:
                 rounds.append(_dc.replace(
                     rnd, coo_val=perturb_weights(k, rnd.coo_val, noise)))

@@ -36,6 +36,11 @@ def quantize_symmetric(w: jax.Array, bits: int = 8, axis: int | None = None) -> 
 
     axis=None → per-tensor scale; axis=k → per-slice scale along axis k
     (kept as a broadcastable vector).
+
+    The clip is symmetric ``[-qmax, qmax]``: the sign-magnitude C2C ladder
+    (1 polarity bit + ``bits-1`` magnitude bits, eq. (2)) cannot represent
+    the two's-complement extreme ``-(qmax+1)`` — its magnitude needs a
+    ``bits``-th magnitude bit — so that code must never be emitted.
     """
     qmax = 2 ** (bits - 1) - 1
     if axis is None:
@@ -43,7 +48,7 @@ def quantize_symmetric(w: jax.Array, bits: int = 8, axis: int | None = None) -> 
     else:
         amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
     scale = jnp.maximum(amax, 1e-12) / qmax
-    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
     return QuantizedTensor(q=q, scale=scale.astype(jnp.float32))
 
 

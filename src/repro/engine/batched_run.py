@@ -79,6 +79,12 @@ class PackedRound:
     ``n_src x n_dest`` unrolled matrix on the host; the device scatters the
     triplets into the kernel's weight tile under jit.  Exactly one of the
     two representations is set (``None`` fields are empty pytree nodes).
+
+    Compressed models (``map_model(compress=True)``) route EVERY round —
+    dense and conv alike — as COO, with ``coo_widx`` (an index into the
+    model-wide ``PackedModel.weight_dict``) in place of ``coo_val``: the
+    device gathers ``weight_dict[coo_widx]`` and scatters, so the only
+    per-synapse float storage on device is the shared dictionary.
     """
 
     tables: PackedTables
@@ -86,11 +92,13 @@ class PackedRound:
     coo_src: jax.Array | None = None    # i32 [nnz]
     coo_dest: jax.Array | None = None   # i32 [nnz], global (padded) columns
     coo_val: jax.Array | None = None    # f32 [nnz]
+    coo_widx: jax.Array | None = None   # i32 [nnz] into PackedModel.weight_dict
 
 
 jax.tree_util.register_dataclass(
     PackedRound,
-    data_fields=["tables", "w_dense", "coo_src", "coo_dest", "coo_val"],
+    data_fields=["tables", "w_dense", "coo_src", "coo_dest", "coo_val",
+                 "coo_widx"],
     meta_fields=[])
 
 
@@ -116,6 +124,9 @@ class PackedModel:
         metadata=dict(static=True), default=None)
     block_d: int = dataclasses.field(
         metadata=dict(static=True), default=DEFAULT_BLOCK_D)
+    # compressed models: shared f32 [K] dictionary of unique quantized A-SYN
+    # words; rounds reference it through ``coo_widx`` (None = uncompressed)
+    weight_dict: jax.Array | None = None
 
     @property
     def n_in(self) -> int:
@@ -127,7 +138,7 @@ class PackedModel:
 
 
 jax.tree_util.register_dataclass(
-    PackedModel, data_fields=["layers"],
+    PackedModel, data_fields=["layers", "weight_dict"],
     meta_fields=["lif", "spec", "block_d"])
 
 
@@ -138,13 +149,25 @@ def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedMode
     matrices — the batched engine executes what is actually in the SRAM.
     Shared-weight (conv) layers replay as COO triplets so the host never
     materializes the unrolled ``n_src x n_dest`` matrix per layer."""
+    compressed = getattr(model, "weight_dict", None) is not None
     layers = []
     for layer in model.layers:
         n_dest_pad = _pad_dest(layer.n_dest, block_d)
         shared = getattr(layer, "shared_weights", False)
         rounds = []
         for rnd in layer.rounds:
-            if shared:
+            if compressed:
+                # every round replays through the shared-dictionary
+                # indirection: (src, dest, widx) triplets, values gathered
+                # on device from PackedModel.weight_dict under jit
+                src, dest_local, widx = rnd.tables.replay_coo_ptr()
+                dest = rnd.neuron_ids[dest_local]
+                rounds.append(PackedRound(
+                    tables=rnd.tables.to_jax(), w_dense=None,
+                    coo_src=jnp.asarray(src, dtype=jnp.int32),
+                    coo_dest=jnp.asarray(dest, dtype=jnp.int32),
+                    coo_widx=jnp.asarray(widx, dtype=jnp.int32)))
+            elif shared:
                 src, dest_local, vals = rnd.tables.replay_coo()
                 dest = rnd.neuron_ids[dest_local]
                 rounds.append(PackedRound(
@@ -160,8 +183,10 @@ def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedMode
                                           w_dense=jnp.asarray(w_glob)))
         layers.append(PackedLayer(rounds=rounds, n_src=layer.n_src,
                                   n_dest=layer.n_dest, n_dest_pad=n_dest_pad))
+    wdict = jnp.asarray(model.weight_dict, dtype=jnp.float32) \
+        if compressed else None
     return PackedModel(layers=layers, lif=model.lif, spec=model.spec,
-                       block_d=block_d)
+                       block_d=block_d, weight_dict=wdict)
 
 
 # --------------------------------------------------------------- jitted core
@@ -193,12 +218,15 @@ def _lif_scan(currents: jax.Array, lif: LIFParams) -> jax.Array:
     return spikes.transpose(1, 0, 2)
 
 
-def _layer_weights(layer: PackedLayer) -> jax.Array:
+def _layer_weights(layer: PackedLayer,
+                   weight_dict: jax.Array | None = None) -> jax.Array:
     """Fuse a layer's rounds into one ``[n_src, n_dest_pad]`` weight tile
     for the event_synapse kernel.  Dense rounds add; COO (shared-weight)
-    rounds scatter their synapse triplets — on device, under jit, O(nnz).
-    Rounds target disjoint destination columns and each (src, dest) pair
-    occurs at most once, so addition order cannot change any bit."""
+    rounds scatter their synapse triplets — on device, under jit, O(nnz);
+    compressed rounds gather their values from the model-wide
+    ``weight_dict`` first (``coo_widx`` indirection).  Rounds target
+    disjoint destination columns and each (src, dest) pair occurs at most
+    once, so addition order cannot change any bit."""
     dense = [r.w_dense for r in layer.rounds if r.w_dense is not None]
     coo = [r for r in layer.rounds if r.w_dense is None]
     w = functools.reduce(jnp.add, dense) if dense else \
@@ -206,7 +234,9 @@ def _layer_weights(layer: PackedLayer) -> jax.Array:
     if coo:
         src = jnp.concatenate([r.coo_src for r in coo])
         dest = jnp.concatenate([r.coo_dest for r in coo])
-        val = jnp.concatenate([r.coo_val for r in coo])
+        val = jnp.concatenate([
+            r.coo_val if r.coo_val is not None else weight_dict[r.coo_widx]
+            for r in coo])
         w = w.at[src, dest].add(val)
     return w
 
@@ -225,7 +255,7 @@ def _forward_impl(packed: PackedModel, spikes: jax.Array,
         events = ops.events_from_spikes(spikes.reshape(b * t, layer.n_src),
                                         _mem_e_depth(layer, max_events))
         # rounds target disjoint destination columns -> one fused kernel call
-        w = _layer_weights(layer)
+        w = _layer_weights(layer, packed.weight_dict)
         currents = ops.event_synapse(events, w, block_d=packed.block_d)
         out = _lif_scan(currents.reshape(b, t, layer.n_dest_pad), packed.lif)
         spikes = out[..., :layer.n_dest]

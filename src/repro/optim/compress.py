@@ -59,9 +59,13 @@ def compress_gradients(grads, residual, cfg: CompressionConfig):
 
 
 def decompress_gradients(comp, grads_like):
+    """Inverse of :func:`compress_gradients`, cast back to each leaf's
+    original dtype — decompression happens in float32 internally, and
+    silently widening a bf16 gradient tree would break dtype-strict
+    optimizer updates (and double the memory the compression saved)."""
     flat_c = jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, tuple))
     flat_g, tree = jax.tree.flatten(grads_like)
-    outs = [_leaf_decompress(q, s, g.shape, g.size)
+    outs = [_leaf_decompress(q, s, g.shape, g.size).astype(g.dtype)
             for (q, s), g in zip(flat_c, flat_g)]
     return jax.tree.unflatten(tree, outs)
 

@@ -6,6 +6,7 @@ import pytest
 from repro.core.accelerator import map_model, reference_forward, run
 from repro.core.energy import ACCEL_1, ACCEL_2, AcceleratorSpec
 from repro.core.lif import LIFParams
+from repro.core.mapping import MappingError
 
 
 def _pruned_mlp(rng, sizes, density=0.5):
@@ -57,7 +58,7 @@ def test_wide_layer_runs_in_rounds(rng):
 def test_weight_memory_violation_raises(rng):
     small = AcceleratorSpec("tiny", 1, 4, 8, weight_mem_bytes=4)
     ws = _pruned_mlp(rng, (16, 16), density=1.0)
-    with pytest.raises(AssertionError, match="SRAM"):
+    with pytest.raises(MappingError, match="SRAM"):
         map_model(ws, small)
 
 

@@ -1,0 +1,156 @@
+"""Synapse compression (arXiv:2112.07019 on the A-SYN SRAM): value dedup,
+the cross-round/cross-layer shared dictionary, and bit-exact execution
+through the indirection — oracle and batched engine alike."""
+
+import numpy as np
+import pytest
+
+from _equivalence import assert_oracle_engine_equivalent
+from repro.core.accelerator import map_model
+from repro.core.energy import AcceleratorSpec
+from repro.core.layers import Conv2d, Dense
+from repro.core.mapping import MappingProblem, solve_mapping
+from repro.core.memories import build_event_memories, compress_weight_words
+from repro.engine.batched_run import run_batched
+
+SPEC = AcceleratorSpec("comp", n_cores=3, n_engines=4, n_caps=8,
+                       weight_mem_bytes=1 << 20)
+
+
+def _mapped_tables(rng, n_src=10, n_dest=14, repeated_values=True,
+                   dedup=False):
+    w = rng.normal(size=(n_src, n_dest)).astype(np.float32)
+    w[rng.random(w.shape) > 0.5] = 0
+    if repeated_values:
+        # quantization collapses weights onto few codes; emulate that so
+        # value dedup has something to merge
+        w = np.round(w * 4) / 4
+    p = MappingProblem.from_weights(w, SPEC.n_engines, SPEC.n_caps)
+    sol = solve_mapping(p)
+    return w, build_event_memories(w, sol, SPEC.n_engines, SPEC.n_caps,
+                                   dedup=dedup)
+
+
+def test_dedup_shrinks_words_replay_unchanged(rng):
+    """Value dedup allocates fewer A-SYN words while replaying the exact
+    same dense effective-weight matrix."""
+    w, _ = _mapped_tables(np.random.default_rng(7), dedup=False)
+    p = MappingProblem.from_weights(w, SPEC.n_engines, SPEC.n_caps)
+    sol = solve_mapping(p)
+    plain = build_event_memories(w, sol, SPEC.n_engines, SPEC.n_caps)
+    deduped = build_event_memories(w, sol, SPEC.n_engines, SPEC.n_caps,
+                                   dedup=True)
+    n_dest = w.shape[1]
+    np.testing.assert_array_equal(plain.dense_weights(n_dest),
+                                  deduped.dense_weights(n_dest))
+    assert deduped.n_weight_words < plain.n_weight_words
+    assert (deduped.alloc_words() <= plain.alloc_words()).all()
+
+
+def test_dict_ptr_invariant_and_accounting(rng):
+    """After compress_weight_words: ``weight_dict[weight_ptr] == weight_mem``
+    on every allocated slot, and the per-table new-word counts sum to the
+    dictionary size."""
+    tabs = []
+    for seed in range(3):
+        _, tb = _mapped_tables(np.random.default_rng(seed), dedup=True)
+        tabs.append(tb)
+    stats = compress_weight_words(tabs)
+    assert stats.dict_words == sum(tb.n_weight_words for tb in tabs)
+    assert stats.dict_words <= stats.slot_words <= stats.synapse_words
+    assert stats.ratio >= 1.0
+    assert stats.compressed_bytes == stats.dict_bytes + stats.ptr_bytes
+    for tb in tabs:
+        words = tb.alloc_words()
+        for j in range(tb.n_engines):
+            a = int(words[j])
+            np.testing.assert_array_equal(
+                tb.weight_dict[tb.weight_ptr[j, :a]], tb.weight_mem[j, :a])
+
+
+def test_replay_coo_ptr_matches_replay_coo(rng):
+    _, tb = _mapped_tables(np.random.default_rng(11), dedup=True)
+    compress_weight_words([tb])
+    src, dest, vals = tb.replay_coo()
+    src2, dest2, widx = tb.replay_coo_ptr()
+    np.testing.assert_array_equal(src, src2)
+    np.testing.assert_array_equal(dest, dest2)
+    np.testing.assert_array_equal(tb.weight_dict[widx], vals)
+
+
+def test_replay_coo_ptr_requires_compression(rng):
+    _, tb = _mapped_tables(np.random.default_rng(12))
+    with pytest.raises(ValueError, match="not compressed"):
+        tb.replay_coo_ptr()
+
+
+def _stack(rng):
+    k = rng.normal(size=(3, 2, 3, 3)).astype(np.float32)
+    k[rng.random(k.shape) > 0.7] = 0
+    conv = Conv2d(kernel=k, in_shape=(2, 6, 6), padding=1)
+    w1 = rng.normal(size=(conv.n_dest, 20)).astype(np.float32)
+    w1[rng.random(w1.shape) > 0.4] = 0
+    w2 = rng.normal(size=(20, 5)).astype(np.float32)
+    return [conv, Dense(w=w1), Dense(w=w2)]
+
+
+def test_compressed_model_shrinks_sram_bit_exact(rng):
+    """The tentpole contract: compress=True shrinks every layer's
+    ``sram_bytes``, populates the compression report, and changes NOTHING
+    about the computed spikes — engine vs engine and oracle vs engine."""
+    specs = _stack(np.random.default_rng(21))
+    m0 = map_model(specs, SPEC)
+    m1 = map_model(specs, SPEC, compress=True)
+    assert m1.compression is not None and m1.weight_dict is not None
+    assert m1.compression.ratio > 1.0
+    assert sum(l.sram_bytes for l in m1.layers) == m1.compression.dict_words
+    for l0, l1 in zip(m0.layers, m1.layers):
+        assert l1.sram_bytes <= l0.sram_bytes
+    rng2 = np.random.default_rng(5)
+    spikes = (rng2.random((3, 5, specs[0].n_src)) < 0.25).astype(np.float32)
+    r0 = run_batched(m0, spikes)
+    r1 = run_batched(m1, spikes)
+    np.testing.assert_array_equal(r0.out_spikes, r1.out_spikes)
+    # full oracle-vs-engine surface on the compressed model (stats differ
+    # from the UNcompressed model — narrower waddr rows — but oracle and
+    # engine must agree with each other on every field)
+    assert_oracle_engine_equivalent(m1, spikes, tag="compressed")
+    assert_oracle_engine_equivalent(m1, spikes, max_events=4,
+                                    tag="compressed-capped")
+
+
+def test_noise_on_compressed_equals_uncompressed_conv(rng):
+    """Analog mismatch is per physical synapse dispatch, not per dictionary
+    entry: perturbing a compressed conv model must equal perturbing the
+    uncompressed one (same fold_in keys, same per-synapse value stream)."""
+    import jax
+
+    from repro.core.noise import AnalogNoise, perturb_packed
+    k = np.random.default_rng(31).normal(size=(2, 1, 3, 3)).astype(np.float32)
+    conv = Conv2d(kernel=k, in_shape=(1, 6, 6))
+    m0 = map_model([conv], SPEC)
+    m1 = map_model([conv], SPEC, compress=True)
+    noise = AnalogNoise(weight_sigma=0.08)
+    key = jax.random.key(9)
+    p0 = perturb_packed(key, m0.pack(), noise)
+    p1 = perturb_packed(key, m1.pack(), noise)
+    spikes = (np.random.default_rng(3).random((2, 4, conv.n_src)) < 0.3
+              ).astype(np.float32)
+    r0 = run_batched(p0, spikes, with_stats=False)
+    r1 = run_batched(p1, spikes, with_stats=False)
+    np.testing.assert_array_equal(r0.out_spikes, r1.out_spikes)
+    # sigma=0 stays the identity (same object, no new jit entries)
+    assert perturb_packed(key, m1.pack(), AnalogNoise(weight_sigma=0.0)) \
+        is m1.pack()
+
+
+def test_autotuned_compressed_model_equivalent(rng):
+    """Autotuner output composes with compression and still satisfies the
+    full oracle-equivalence contract on its (possibly re-shaped) grid."""
+    from repro.core.mapping import autotune_grid
+    specs = _stack(np.random.default_rng(41))
+    res = autotune_grid(specs, SPEC, compress=True)
+    assert res.best.rounds_per_timestep <= res.default.rounds_per_timestep
+    spikes = (np.random.default_rng(6).random((2, 4, specs[0].n_src)) < 0.2
+              ).astype(np.float32)
+    assert_oracle_engine_equivalent(res.model, spikes, tag="autotuned")

@@ -15,6 +15,7 @@ import pytest
 from repro.core.accelerator import map_model, reference_forward, run_batch
 from repro.core.energy import AcceleratorSpec
 from repro.core.layers import Conv2d, Dense, SumPool2d, as_layer_spec
+from repro.core.mapping import MappingError
 from repro.core.lif import LIFParams
 from repro.core.prune import prune_pytree
 from repro.data.events import EventDatasetConfig, event_batches, \
@@ -107,7 +108,7 @@ def test_map_model_rejects_physical_sram_overflow(rng):
     conv = Conv2d(kernel=kern, in_shape=(1, 6, 6), stride=1, padding=0)
     tight = AcceleratorSpec("tight", n_cores=1, n_engines=4, n_caps=8,
                             weight_mem_bytes=20)     # 18 <= 20 precheck OK
-    with pytest.raises(AssertionError, match="round"):
+    with pytest.raises(MappingError, match="round"):
         map_model([conv], tight)
 
 
@@ -159,9 +160,9 @@ def test_layer_specs_match_training_forward():
 def test_map_model_rejects_shape_mismatch(rng):
     conv = Conv2d(kernel=_rand_kernel(rng, 2, 1, 3), in_shape=(1, 5, 5))
     bad_dense = Dense(w=rng.normal(0, 1, (7, 4)).astype(np.float32))
-    with pytest.raises(AssertionError, match="expects"):
+    with pytest.raises(ValueError, match="expects"):
         map_model([conv, bad_dense], SPEC)
-    with pytest.raises(AssertionError, match="2-D"):
+    with pytest.raises(ValueError, match="2-D"):
         as_layer_spec(rng.normal(0, 1, (2, 2, 3, 3)))
 
 

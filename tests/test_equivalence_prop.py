@@ -75,7 +75,8 @@ def build_case(case: dict):
         else:
             raise ValueError(f"unknown layer kind {ld['kind']!r}")
     lif = LIFParams(beta=case["beta"], threshold=case["threshold"])
-    model = map_model(specs, spec, lif=lif)
+    model = map_model(specs, spec, lif=lif,
+                      compress=bool(case.get("compress", False)))
     n_in = specs[0].n_src
     spikes = (rng.random((case["batch"], case["t"], n_in))
               < case["p_spike"]).astype(np.float32)
@@ -112,13 +113,13 @@ def check_and_record(case: dict):
 # ------------------------------------------------------------- strategies
 
 def _dense_case(seed, widths, density, batch, t, p_spike, max_events,
-                engines, caps, beta=0.8, threshold=0.7):
+                engines, caps, beta=0.8, threshold=0.7, compress=False):
     return {"seed": seed, "in_shape": [widths[0], 1, 1],
             "layers": [{"kind": "dense", "n_out": n, "density": density}
                        for n in widths[1:]],
             "batch": batch, "t": t, "p_spike": p_spike,
             "max_events": max_events, "n_engines": engines, "n_caps": caps,
-            "beta": beta, "threshold": threshold}
+            "beta": beta, "threshold": threshold, "compress": compress}
 
 
 try:
@@ -144,7 +145,8 @@ if HAVE_HYPOTHESIS:
             engines=draw(st.integers(1, 4)),
             caps=draw(st.integers(2, 6)),      # widths>caps*engines => rounds
             beta=draw(st.sampled_from([0.5, 0.8, 0.9])),
-            threshold=draw(st.sampled_from([0.4, 0.7, 1.0])))
+            threshold=draw(st.sampled_from([0.4, 0.7, 1.0])),
+            compress=draw(st.booleans()))
 
     @st.composite
     def conv_cases(draw):
@@ -175,7 +177,8 @@ if HAVE_HYPOTHESIS:
                                              st.integers(0, 10))),
                 "n_engines": draw(st.integers(2, 4)),
                 "n_caps": draw(st.integers(3, 8)),
-                "beta": 0.8, "threshold": draw(st.sampled_from([0.5, 0.9]))}
+                "beta": 0.8, "threshold": draw(st.sampled_from([0.5, 0.9])),
+                "compress": draw(st.booleans())}
 else:                           # bare env: decorators below become skips
     def dense_cases():
         return None
@@ -210,7 +213,8 @@ def _sweep_cases():
             density=0.3 + 0.05 * (seed % 8), batch=2, t=5,
             p_spike=0.1 + 0.05 * (seed % 10),
             max_events=None if seed % 3 == 0 else seed % 5,
-            engines=1 + seed % 3, caps=3 + seed % 4))
+            engines=1 + seed % 3, caps=3 + seed % 4,
+            compress=seed % 2 == 1))
     for seed in range(16):
         cases.append({
             "seed": 1000 + seed, "in_shape": [1 + seed % 2, 5 + seed % 3,
@@ -224,7 +228,8 @@ def _sweep_cases():
             "batch": 2, "t": 4, "p_spike": 0.25,
             "max_events": None if seed % 2 else 4,
             "n_engines": 2 + seed % 3, "n_caps": 4 + seed % 3,
-            "beta": 0.8, "threshold": 0.7})
+            "beta": 0.8, "threshold": 0.7,
+            "compress": seed % 3 == 1})
     for seed in range(16):
         cases.append({
             "seed": 2000 + seed, "in_shape": [2, 6, 6],
@@ -237,7 +242,8 @@ def _sweep_cases():
             "batch": 3, "t": 4, "p_spike": 0.1 + 0.04 * (seed % 6),
             "max_events": None if seed % 4 else 8,
             "n_engines": 3, "n_caps": 5,
-            "beta": 0.9, "threshold": 0.5})
+            "beta": 0.9, "threshold": 0.5,
+            "compress": seed % 2 == 0})
     return cases
 
 

@@ -1,10 +1,13 @@
 """ILP mapping (paper §III-D, eqs. 3-7): exactness + constraint compliance."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.mapping import (MappingProblem, max_flow_assignment,
+from repro.core.mapping import (MappingError, MappingProblem, autotune_grid,
+                                candidate_grids, max_flow_assignment,
                                 solve_mapping, solve_mapping_bruteforce,
                                 solve_mapping_full_ilp, solve_mapping_greedy,
                                 solve_mapping_reduced_ilp)
@@ -105,3 +108,96 @@ def test_ilp_load_balances_rows():
     loads = np.bincount(s.engine[s.engine >= 0], minlength=4)
     assert loads.max() <= 4
     assert s.n_assigned == 16
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_cross_solver_property(seed):
+    """Every solver on the same random problem: greedy, reduced ILP and
+    (under fan-out slack) max-flow all pass ``check``, and the exact ILP
+    never assigns fewer neurons than the greedy heuristic."""
+    rng = np.random.default_rng(seed)
+    slack = bool(seed % 2)
+    p = _random_problem(rng, n_src=5, n_dest=7, m=2, n=3,
+                        density=0.5, fanout_slack=slack)
+    s_g = solve_mapping_greedy(p)
+    s_ilp = solve_mapping_reduced_ilp(p)
+    s_g.check(p)
+    s_ilp.check(p)
+    assert s_g.n_assigned <= s_ilp.n_assigned
+    if slack:
+        s_mf = max_flow_assignment(p)
+        s_mf.check(p)
+        assert s_mf.n_assigned == s_ilp.n_assigned
+
+
+def test_check_raises_mapping_error_not_assert():
+    """Regression: solution validation used ``assert`` — stripped under
+    ``python -O``, so a corrupt mapping would sail into the memory builders.
+    ``check`` must raise a real :class:`MappingError`."""
+    conn = np.ones((2, 4), dtype=bool)
+    p = MappingProblem(n_dest=4, n_engines=2, n_caps=2, conn=conn,
+                       fanout=np.full(2, 4))
+    s = solve_mapping(p, method="reduced_ilp")
+    s.check(p)
+    # same capacitor twice on one engine -> capacitor-reuse violation
+    bad = dataclasses.replace(
+        s, capacitor=np.where(s.engine >= 0,
+                              np.zeros_like(s.capacitor), s.capacitor))
+    with pytest.raises(MappingError):
+        bad.check(p)
+    # lie about the assignment count
+    bad2 = dataclasses.replace(s, n_assigned=s.n_assigned + 1)
+    with pytest.raises(MappingError):
+        bad2.check(p)
+
+
+def test_maxflow_without_slack_raises():
+    rng = np.random.default_rng(7)
+    p = _random_problem(rng, n_src=4, n_dest=6, m=2, n=2,
+                        density=0.6, fanout_slack=False)
+    with pytest.raises(MappingError, match="slack"):
+        max_flow_assignment(p)
+
+
+# ------------------------------------------------------------- autotuner
+
+def test_candidate_grids_same_capacity_and_default():
+    from repro.core.energy import ACCEL_2
+    grids = candidate_grids(ACCEL_2)
+    cap = ACCEL_2.n_engines * ACCEL_2.n_caps
+    assert (ACCEL_2.n_engines, ACCEL_2.n_caps) in grids
+    assert all(m * n == cap and m > 1 and n > 1 for m, n in grids)
+    assert len(set(grids)) == len(grids)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_autotune_never_regresses_rounds(seed):
+    """The winning grid's rounds-per-timestep is never worse than the
+    default grid's (the default is always a scored candidate)."""
+    from repro.core.energy import AcceleratorSpec
+    rng = np.random.default_rng(seed)
+    spec = AcceleratorSpec("tune", n_cores=2, n_engines=4, n_caps=8,
+                           weight_mem_bytes=1 << 20)
+    n_mid = int(rng.integers(8, 60))
+    w1 = rng.normal(size=(10, n_mid)) * (rng.random((10, n_mid)) < 0.5)
+    w2 = rng.normal(size=(n_mid, 6)) * (rng.random((n_mid, 6)) < 0.6)
+    res = autotune_grid([w1, w2], spec)
+    assert res.best.feasible
+    assert res.best.rounds_per_timestep <= res.default.rounds_per_timestep
+    assert res.best.key <= res.default.key
+    # scoreboard is sorted best-first and includes every candidate grid
+    assert [s.key for s in res.scores] == sorted(s.key for s in res.scores)
+    got = {(s.n_engines, s.n_caps) for s in res.scores}
+    assert (spec.n_engines, spec.n_caps) in got
+
+
+def test_autotune_infeasible_everywhere_raises():
+    from repro.core.energy import AcceleratorSpec
+    rng = np.random.default_rng(0)
+    tiny = AcceleratorSpec("tiny", n_cores=1, n_engines=4, n_caps=4,
+                           weight_mem_bytes=2)
+    w = rng.normal(size=(12, 12))
+    with pytest.raises(MappingError, match="no feasible grid"):
+        autotune_grid([w], tiny)

@@ -41,6 +41,27 @@ def test_ladder_times_scale_recovers_dequant(rng):
                                np.asarray(qt.dequantize()), atol=1e-5)
 
 
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([4, 6, 8]))
+def test_every_code_is_ladder_representable(seed, bits):
+    """Regression: the clip used to admit ``-(qmax+1)`` (two's-complement
+    extreme), whose magnitude needs a ``bits``-th magnitude bit the
+    sign-magnitude C2C ladder does not have — eq. (2) would silently read
+    the word as 0 magnitude.  Every emitted code must stay in
+    ``[-qmax, qmax]`` and round-trip through the ladder exactly."""
+    rng = np.random.default_rng(seed)
+    w = np.concatenate([rng.normal(size=30).astype(np.float32),
+                        [-1.0, 1.0, -1e9, 1e9, 0.0, -0.5]]).astype(np.float32)
+    qt = quantize_symmetric(jnp.asarray(w), bits=bits)
+    q = np.asarray(qt.q, dtype=np.int64)
+    qmax = 2 ** (bits - 1) - 1
+    assert q.min() >= -qmax and q.max() <= qmax
+    # ladder fraction * 2^bits recovers the code bit for bit
+    recon = np.round(np.asarray(c2c_ladder_value(qt.q, bits=bits),
+                                dtype=np.float64) * 2.0 ** bits)
+    np.testing.assert_array_equal(recon.astype(np.int64), q)
+
+
 def test_prune_amount(rng):
     w = jnp.asarray(rng.normal(size=(50, 40)).astype(np.float32))
     mask = l1_prune_mask(w, 0.7)

@@ -157,3 +157,17 @@ def test_microbatched_grads_match_full():
     # microbatched loss is the mean over microbatch losses == full-batch MSE
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
                                rtol=1e-5)
+
+def test_decompress_preserves_leaf_dtype(rng):
+    """Regression: decompress_gradients always returned float32, silently
+    widening bf16 gradient trees — optimizer updates downstream of the
+    all-reduce would run at the wrong dtype (and double the memory)."""
+    grads = {"w": jnp.asarray(rng.normal(size=(17, 5)), dtype=jnp.bfloat16),
+             "b": jnp.asarray(rng.normal(size=(33,)).astype(np.float32))}
+    comp_cfg = CompressionConfig(enabled=True, block=16)
+    comp, _ = compress_gradients(grads, init_residual(grads), comp_cfg)
+    approx = decompress_gradients(comp, grads)
+    assert approx["w"].dtype == jnp.bfloat16
+    assert approx["b"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(approx["w"], np.float32),
+                               np.asarray(grads["w"], np.float32), atol=0.1)

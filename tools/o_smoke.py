@@ -1,0 +1,112 @@
+"""Tier-1 smoke under ``python -O`` — the assert-stripped interpreter.
+
+``-O`` removes every ``assert`` statement, so any *load-bearing* validation
+written as an assert silently vanishes in optimized deployments.  This
+script drives the mapping -> memories -> engine chain end to end and checks
+that (a) results are still bit-exact and (b) the hardened error paths —
+:class:`repro.core.mapping.MappingError` / ``ValueError`` conversions from
+PR 7 — still raise with asserts stripped.  pytest is useless here (its own
+test asserts would be stripped too); every check below raises a real
+exception on failure.
+
+  python -O tools/o_smoke.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np  # noqa: E402
+
+
+def check(cond: bool, msg: str) -> None:
+    """assert that survives -O."""
+    if not cond:
+        raise SystemExit(f"o_smoke FAILED: {msg}")
+
+
+def expect_raises(exc_type, fn, msg: str) -> None:
+    try:
+        fn()
+    except exc_type:
+        return
+    raise SystemExit(f"o_smoke FAILED: {msg} (no {exc_type.__name__})")
+
+
+def main() -> None:
+    if __debug__:
+        print("o_smoke: WARNING — running without -O; the assert-stripping "
+              "this script exists to cover is not exercised")
+
+    import dataclasses
+
+    from repro.core.accelerator import map_model, run
+    from repro.core.energy import AcceleratorSpec
+    from repro.core.layers import Conv2d, as_layer_spec
+    from repro.core.mapping import (MappingError, MappingProblem,
+                                    autotune_grid, max_flow_assignment,
+                                    solve_mapping)
+    from repro.engine.batched_run import run_batched
+
+    spec = AcceleratorSpec("osmoke", n_cores=2, n_engines=4, n_caps=8,
+                           weight_mem_bytes=1 << 20)
+    rng = np.random.default_rng(0)
+    w1 = rng.normal(size=(12, 40)) * (rng.random((12, 40)) < 0.5)
+    w2 = rng.normal(size=(40, 6)) * (rng.random((40, 6)) < 0.6)
+
+    # 1. the oracle-vs-engine contract holds, compressed and not
+    m0 = map_model([w1, w2], spec)
+    m1 = map_model([w1, w2], spec, compress=True)
+    spikes = (rng.random((2, 5, 12)) < 0.3).astype(np.float32)
+    r0 = run_batched(m0, spikes)
+    r1 = run_batched(m1, spikes)
+    check(np.array_equal(r0.out_spikes, r1.out_spikes),
+          "compressed engine != uncompressed engine")
+    oracle = run(m1, spikes[0])
+    check(np.array_equal(np.asarray(oracle.out_spikes), r1.out_spikes[0]),
+          "oracle != engine under -O")
+    check(sum(l.sram_bytes for l in m1.layers)
+          < sum(l.sram_bytes for l in m0.layers),
+          "compression did not shrink allocated words")
+
+    # 2. hardened error paths fire with asserts stripped
+    tiny = AcceleratorSpec("tiny", n_cores=1, n_engines=4, n_caps=4,
+                           weight_mem_bytes=2)
+    expect_raises(MappingError, lambda: map_model([w1[:, :16]], tiny),
+                  "SRAM overflow must raise MappingError under -O")
+    expect_raises(ValueError,
+                  lambda: as_layer_spec(rng.normal(size=(2, 2, 3, 3))),
+                  "4-D bare array must raise ValueError under -O")
+    expect_raises(ValueError,
+                  lambda: Conv2d(kernel=np.zeros((2, 3, 3, 3)),
+                                 in_shape=(1, 6, 6)),
+                  "channel mismatch must raise ValueError under -O")
+    expect_raises(ValueError, lambda: map_model([w1, w1], spec),
+                  "chain-shape mismatch must raise ValueError under -O")
+
+    conn = np.ones((2, 4), dtype=bool)
+    prob = MappingProblem(n_dest=4, n_engines=2, n_caps=2, conn=conn,
+                          fanout=np.full(2, 4))
+    sol = solve_mapping(prob, method="reduced_ilp")
+    sol.check(prob)
+    bad = dataclasses.replace(sol, n_assigned=sol.n_assigned + 1)
+    expect_raises(MappingError, lambda: bad.check(prob),
+                  "corrupt solution must raise MappingError under -O")
+    tight = MappingProblem(n_dest=4, n_engines=2, n_caps=2, conn=conn,
+                           fanout=np.full(2, 1))
+    expect_raises(MappingError, lambda: max_flow_assignment(tight),
+                  "max-flow without fan-out slack must raise under -O")
+
+    # 3. the autotuner's no-regression guarantee holds under -O
+    res = autotune_grid([w1, w2], spec)
+    check(res.best.rounds_per_timestep <= res.default.rounds_per_timestep,
+          "autotuner regressed rounds-per-timestep")
+
+    print("o_smoke: OK (__debug__ =", __debug__, ")")
+
+
+if __name__ == "__main__":
+    main()
