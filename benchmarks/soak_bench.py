@@ -71,7 +71,8 @@ def _scenario_row(m: dict) -> dict:
             "dispatches", "forced_dispatches", "device_losses",
             "mesh_size_start", "mesh_size_end", "slo_switches",
             "slo_shedding", "noise_probes", "noise_agreement",
-            "bucket_fill_ratio", "max_queue_depth", "makespan_s")
+            "bucket_fill_ratio", "max_queue_depth", "makespan_s",
+            "hot_swaps", "per_model")
     return {k: m[k] for k in keep}
 
 
@@ -99,6 +100,20 @@ def bench_scenarios(packed, mesh) -> list[dict]:
         if name == "slo_shed":    # the one scenario engineered to overload
             assert m1["slo_switches"] >= 1, \
                 f"{name}: SLO controller never switched"
+        if sc.tenants:
+            per = m1["per_model"]
+            assert set(per) == {t.name for t in sc.tenants}
+            for t in sc.tenants:   # conservation holds tenant by tenant
+                mm = per[t.name]
+                assert mm["submitted"] == mm["admitted"] + mm["rejected"] \
+                    and mm["admitted"] == mm["completed"] + mm["shed"], \
+                    f"{name}: tenant {t.name} leaked requests: {mm}"
+            if sc.swap_tenant:
+                assert m1["hot_swaps"] == 1 and \
+                    per[sc.swap_tenant]["hot_swaps"] == 1, \
+                    f"{name}: scripted hot-swap never fired"
+                assert per[sc.swap_tenant]["deadline_miss_rate"] <= 0.05, \
+                    f"{name}: burst starved the swap tenant's deadlines"
         print(f"soak/scenario/{name}: {m1['completed']}/{m1['requests']} "
               f"served | miss {m1['deadline_miss_rate']:.3f} | mesh "
               f"{m1['mesh_size_start']}->{m1['mesh_size_end']} | slo_sw "

@@ -7,12 +7,15 @@ from repro.engine.serving import (BucketPolicy, OverlongRequestError,  # noqa: F
                                   execute_plan, plan_batches, run_bucketed)
 from repro.engine.sharded_run import (DeviceLossError, run_sharded,  # noqa: F401
                                       shrink_mesh, snn_serve_mesh)
-from repro.engine.stream_server import (METRIC_KEYS, Rejection,  # noqa: F401
-                                        Request, SLOPolicy, ServerMetrics,
-                                        StreamServer, VirtualClock, WallClock,
-                                        serve_trace)
+from repro.engine.registry import (DEFAULT_MODEL, ModelEntry,  # noqa: F401
+                                   ModelRegistry, UnknownModelError)
+from repro.engine.stream_server import (METRIC_KEYS, PER_MODEL_KEYS,  # noqa: F401
+                                        Rejection, Request, SLOPolicy,
+                                        ServerMetrics, StreamServer,
+                                        VirtualClock, WallClock, serve_trace)
 from repro.engine.chaos import (ARRIVAL_MODES, ChaosScenario,  # noqa: F401
-                                SCENARIOS, make_chaos_hook, run_scenario,
+                                SCENARIOS, TenantSpec, make_chaos_hook,
+                                run_scenario, swap_model_for,
                                 synth_arrival_trace)
 from repro.engine.train_loop import TrainLoopConfig, TrainState, make_train_step, train_loop  # noqa: F401
 from repro.engine.snn_train import (CONV_MODEL, MLP_MODEL, SNNModel,  # noqa: F401

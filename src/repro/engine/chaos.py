@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.core.noise import AnalogNoise
 from repro.engine import batched_run as br
+from repro.engine.registry import ModelRegistry
 from repro.engine.serving import BucketPolicy
 from repro.engine.sharded_run import DeviceLossError
 from repro.engine.stream_server import (SLOPolicy, StreamServer, VirtualClock,
@@ -143,6 +144,24 @@ def make_chaos_hook(lose_devices):
 # -------------------------------------------------------------- scenarios
 
 @dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant of a multi-tenant scenario: its own arrival process and
+    deadline profile on the shared fabric.  ``seed_offset`` decorrelates
+    the tenant's trace from its neighbours under the scenario seed;
+    ``weight`` is its weighted-fair scheduling share."""
+
+    name: str
+    arrivals: str = "poisson"
+    n_requests: int = 24
+    rate: float = 200.0
+    slack: float = 0.25
+    t_lo: int = 3
+    t_hi: int = 12
+    weight: float = 1.0
+    seed_offset: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class ChaosScenario:
     """One named failure script for the always-on server.  Every field is
     plain data, so a scenario is reproducible from its definition alone;
@@ -166,6 +185,17 @@ class ChaosScenario:
     queue_capacity: int = 256
     service_s: float = 0.002            # simulated seconds per engine call
     seed: int = 0
+    # multi-tenant scripts: each TenantSpec serves the scenario model as its
+    # own registry entry (own bucket policy, own arrival process); an empty
+    # tuple is the single-tenant fast path.  swap_tenant/swap_at script a
+    # mid-soak hot-swap: at simulated time swap_at the named tenant's
+    # weights are replaced by a deterministically perturbed instance
+    # (swap_sigma C2C gain error on the base model) — same shapes,
+    # different bits, fully reproducible from the scenario seed.
+    tenants: tuple[TenantSpec, ...] = ()
+    swap_tenant: str | None = None
+    swap_at: float = 0.08               # simulated seconds into the soak
+    swap_sigma: float = 0.2
 
     @property
     def needs_mesh(self) -> bool:
@@ -220,6 +250,22 @@ SCENARIOS: dict[str, ChaosScenario] = {s.name: s for s in (
         arrivals="adversarial", n_requests=48, rate=300.0, slack=0.2,
         noise_sigma=0.05, noise_probe_every=2, lose_devices=((2, 1),),
         slo=SLOPolicy(target_miss_rate=0.5, window=16, min_samples=8)),
+    ChaosScenario(
+        name="multi_tenant",
+        description="Two tenants share one fabric: a steady Poisson tenant "
+                    "with real deadlines next to an adversarial flood "
+                    "tenant, plus a mid-soak hot-swap of the steady "
+                    "tenant's weights.  Weighted-fair scheduling must keep "
+                    "the flood from starving the steady tenant's deadlines, "
+                    "and the swap must drain on the old weights with zero "
+                    "requests lost.",
+        tenants=(TenantSpec(name="steady", arrivals="poisson",
+                            n_requests=24, rate=150.0, slack=0.25,
+                            seed_offset=1),
+                 TenantSpec(name="bursty", arrivals="adversarial",
+                            n_requests=32, rate=400.0, slack=0.2,
+                            seed_offset=2)),
+        swap_tenant="steady", swap_at=0.08),
 )}
 
 
@@ -240,6 +286,8 @@ def run_scenario(model, scenario: ChaosScenario, *, mesh=None,
         assert mesh is not None and mesh.size >= 2, \
             f"scenario {scenario.name!r} scripts device loss — run it on a " \
             f">= 2-device mesh (--spoof-devices N on CPU)"
+    if scenario.tenants:
+        return _run_multi_tenant(packed, scenario, mesh=mesh, policy=policy)
     trace = synth_arrival_trace(
         scenario.n_requests, packed.n_in, mode=scenario.arrivals,
         rate=scenario.rate, slack=scenario.slack, t_lo=scenario.t_lo,
@@ -265,6 +313,65 @@ def run_scenario(model, scenario: ChaosScenario, *, mesh=None,
     snap.update({
         "scenario": scenario.name,
         "requests": len(trace),
+        "served_all_admitted": snap["completed"] == snap["admitted"],
+        "mesh_size_start": mesh.size if mesh is not None else 1,
+        "mesh_size_end": (server.mesh.size if server.mesh is not None
+                          else 1),
+        "makespan_s": server.now(),
+    })
+    return results, rids, snap
+
+
+def swap_model_for(packed, scenario: ChaosScenario):
+    """The weights a multi-tenant scenario hot-swaps in at ``swap_at``: one
+    deterministic perturbed instance of the base model (same shapes —
+    same-shape swaps add no jit traces — different bits, reproducible from
+    the scenario seed alone).  Exposed so tests and the soak bench can
+    verify post-swap results bit-exact against the exact swapped model."""
+    from repro.core.noise import as_noise_key, perturb_packed
+    return perturb_packed(as_noise_key(scenario.seed + 7919), packed,
+                          AnalogNoise(weight_sigma=scenario.swap_sigma))
+
+
+def _run_multi_tenant(packed, scenario: ChaosScenario, *, mesh,
+                      policy: BucketPolicy | None):
+    """The multi-tenant leg of :func:`run_scenario`: every tenant serves
+    the scenario model as its own registry entry (per-tenant covering
+    bucket policy), the merged per-tenant traces replay on one fabric, and
+    ``swap_tenant`` is hot-swapped to :func:`swap_model_for`'s weights at
+    ``swap_at`` via a serve_trace control event."""
+    n_shards = mesh.size if mesh is not None else 1
+    registry = ModelRegistry()
+    tagged = []
+    for spec in scenario.tenants:
+        trace = synth_arrival_trace(
+            spec.n_requests, packed.n_in, mode=spec.arrivals, rate=spec.rate,
+            slack=spec.slack, t_lo=spec.t_lo, t_hi=spec.t_hi,
+            seed=scenario.seed + spec.seed_offset)
+        p = policy if policy is not None else BucketPolicy.covering(
+            [s.shape[0] for _, s, _ in trace], n_shards=n_shards,
+            max_batch=4 * n_shards)
+        registry.register(spec.name, packed, policy=p, weight=spec.weight)
+        tagged.extend((t, s, d, spec.name) for t, s, d in trace)
+    tagged.sort(key=lambda e: e[0])     # stable: ties keep tenant order
+    control = []
+    if scenario.swap_tenant is not None:
+        swapped = swap_model_for(packed, scenario)
+        control.append((scenario.swap_at,
+                        lambda srv: srv.swap(scenario.swap_tenant, swapped)))
+    server = StreamServer(
+        registry, mesh=mesh, clock=VirtualClock(),
+        queue_capacity=scenario.queue_capacity,
+        backpressure=scenario.backpressure, overlong=scenario.overlong,
+        service_model=lambda b, t: scenario.service_s,
+        noise_probe_every=scenario.noise_probe_every, slo=scenario.slo,
+        chaos_hook=(make_chaos_hook(scenario.lose_devices)
+                    if scenario.lose_devices else None))
+    results, rids = serve_trace(server, tagged, control=control)
+    snap = server.metrics.snapshot()
+    snap.update({
+        "scenario": scenario.name,
+        "requests": len(tagged),
         "served_all_admitted": snap["completed"] == snap["admitted"],
         "mesh_size_start": mesh.size if mesh is not None else 1,
         "mesh_size_end": (server.mesh.size if server.mesh is not None

@@ -9,6 +9,8 @@ deadlines, backpressure, and chaos recovery over a live connection:
   PYTHONPATH=src python -m repro.launch.socket_serve --model mlp \
       --port 7473 [--spoof-devices 2] [--noise-sigma 0.05] \
       [--slo-target 0.1] [--smoke]
+  PYTHONPATH=src python -m repro.launch.socket_serve --models mlp,conv \
+      --port 7473 [--smoke]        # multi-tenant fabric, one per name
 
 Design: a single-threaded ``selectors`` event loop.  Engine dispatches run
 inline (the loop drains sockets between engine calls — exactly the
@@ -17,7 +19,15 @@ numbers and the VirtualClock replays describe the same machine).  The
 select timeout tracks ``StreamServer.next_deadline()``, so deadline-forced
 partial dispatches fire on time even when no bytes arrive.  Every request
 gets an answer: results as bit-exact spike rasters, rejections (admission,
-backpressure, shed) as reasoned REJECT frames.
+backpressure, shed, unknown model) as reasoned REJECT frames.
+
+Multi-tenant serving: v2 REQUEST frames carry a model name and route to
+that tenant of the server's :class:`~repro.engine.registry.ModelRegistry`;
+v1 frames (older edge sensors) route to the default model.  ADMIN frames
+are the control plane — ``{"op": "swap", "model": ..., ...}`` hot-swaps a
+tenant live through the configured ``model_factory`` (in-flight requests
+drain on the old weights, zero drops), ``{"op": "list"}`` enumerates
+tenants and their generations.
 """
 
 from __future__ import annotations
@@ -39,6 +49,8 @@ _SPOOFED = spoof_devices_from_argv()  # before any jax import in this process
 import numpy as np  # noqa: E402
 
 from repro.engine import ingest  # noqa: E402
+from repro.engine.registry import (ModelRegistry,  # noqa: E402
+                                   UnknownModelError)
 from repro.engine.serving import BucketPolicy  # noqa: E402
 from repro.engine.stream_server import SLOPolicy, StreamServer  # noqa: E402
 
@@ -66,14 +78,22 @@ class SpikeSocketServer:
     ``StreamServer`` chaos knobs (noise, SLO policy, chaos hook, mesh)
     pass through ``server_kwargs`` — the soak harness injects device loss
     into a *live* socket server exactly as the deterministic replays do.
+
+    ``model`` is a single packed/mapped model (with ``policy``) or a
+    :class:`~repro.engine.registry.ModelRegistry` (multi-tenant; leave
+    ``policy`` unset).  ``model_factory(spec: dict) -> PackedModel`` turns
+    an ADMIN swap request's JSON body into new weights; without one, swap
+    requests are refused (the data plane is unaffected).
     """
 
-    def __init__(self, model, *, policy: BucketPolicy,
+    def __init__(self, model, *, policy: BucketPolicy | None = None,
                  host: str = "127.0.0.1", port: int = 0,
-                 max_request_steps: int = 4096, **server_kwargs):
+                 max_request_steps: int = 4096, model_factory=None,
+                 **server_kwargs):
         self.server = StreamServer(model, policy=policy,
                                    on_rejection=self._on_rejection,
                                    **server_kwargs)
+        self.model_factory = model_factory
         # untrusted-input bound: a protocol-valid REQUEST header may claim
         # any u32 T; cap it before unpacking (T * n_in float32 blows up
         # ~32x over the wire size) and before it reaches admission
@@ -151,28 +171,35 @@ class SpikeSocketServer:
             self._send(conn, ingest.encode_result(req_id, res.out_spikes))
 
     def _on_request(self, conn: _Conn, frame: ingest.Frame) -> None:
-        if frame.kind != ingest.KIND_REQUEST:
-            raise ingest.ProtocolError(
-                f"client sent frame kind {frame.kind}, expected REQUEST")
-        # validate the claimed shape BEFORE unpacking or submitting: a
-        # well-framed request with the wrong raster width (or an absurd T)
-        # must answer with a REJECT, not raise out of the event loop and
-        # kill serving for every other connected client
-        req_id, t, n_in, _ = ingest.peek_request(frame.payload)
-        want = self.server.packed.n_in
+        # resolve the tenant and validate the claimed shape BEFORE
+        # unpacking or submitting: a well-framed request with an unknown
+        # model, the wrong raster width, or an absurd T must answer with a
+        # REJECT, not raise out of the event loop and kill serving for
+        # every other connected client.  v1 frames carry no model name and
+        # route to the registry default.
+        req_id, t, n_in, slack, model = ingest.peek_request(
+            frame.payload, frame.version)
+        try:
+            entry = self.server.registry.get(model)
+        except UnknownModelError as e:
+            self._send(conn, ingest.encode_rejection(
+                req_id, f"unknown_model: {e}"))
+            return
+        want = entry.packed.n_in
         if n_in != want:
             self._send(conn, ingest.encode_rejection(
                 req_id, f"bad_shape: raster width {n_in} != model "
-                        f"n_in {want}"))
+                        f"{entry.name!r} n_in {want}"))
             return
         if t > self.max_request_steps:
             self._send(conn, ingest.encode_rejection(
                 req_id, f"overlong: {t} steps > socket cap "
                         f"{self.max_request_steps}"))
             return
-        _, stream, slack = ingest.decode_request(frame.payload)
+        _, stream, slack, model = ingest.decode_request(
+            frame.payload, frame.version)
         rid = self.server.submit(
-            stream, slack=None if math.isinf(slack) else slack)
+            stream, model=model, slack=None if math.isinf(slack) else slack)
         if rid is None:
             rej = self._last_inline_rej
             self._send(conn, ingest.encode_rejection(
@@ -180,6 +207,39 @@ class SpikeSocketServer:
             return
         self._owner[rid] = (conn, req_id)
         conn.inflight += 1
+
+    def _on_admin(self, conn: _Conn, frame: ingest.Frame) -> None:
+        """Control plane: hot-swap a tenant / list tenants.  Every admin
+        request gets an ADMIN reply echoing its req_id; failures answer
+        ``{"ok": false, "error": ...}`` instead of touching the data
+        plane."""
+        req_id, body = ingest.decode_admin(frame.payload)
+        op = body.get("op")
+        try:
+            if op == "list":
+                reply = {"ok": True,
+                         "default": self.server.registry.default,
+                         "models": {n: self.server.registry.get(n).generation
+                                    for n in self.server.registry.names()}}
+            elif op == "swap":
+                if self.model_factory is None:
+                    raise RuntimeError("no model_factory configured; "
+                                       "hot-swap is disabled on this server")
+                name = body.get("model") or self.server.registry.default
+                packed = self.model_factory(dict(body))
+                entry = self.server.swap(name, packed)
+                # the swap drained the tenant's in-flight requests on the
+                # old weights — answer their owners before acking the swap
+                self._deliver(self.server.collect())
+                reply = {"ok": True, "model": name,
+                         "generation": entry.generation}
+                _log.info("socket_serve: hot-swapped %r -> generation %d",
+                          name, entry.generation)
+            else:
+                raise ValueError(f"unknown admin op {op!r}")
+        except Exception as e:  # control plane: report, never crash serving
+            reply = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        self._send(conn, ingest.encode_admin(req_id, reply))
 
     def _on_readable(self, sock: socket.socket) -> None:
         if sock is self._listener:
@@ -209,13 +269,25 @@ class SpikeSocketServer:
             return
         try:
             for frame in conn.decoder.feed(chunk):
-                self._on_request(conn, frame)
+                if frame.kind == ingest.KIND_ADMIN:
+                    self._on_admin(conn, frame)
+                elif frame.kind == ingest.KIND_REQUEST:
+                    self._on_request(conn, frame)
+                else:
+                    raise ingest.ProtocolError(
+                        f"client sent frame kind {frame.kind}, "
+                        f"expected REQUEST or ADMIN")
                 # a full-bucket submit may have dispatched inline
                 self._deliver(self.server.collect())
                 self._drain_new_rejections()
         except ingest.ProtocolError as e:
-            _log.warning("socket_serve: protocol error, dropping client: %s",
-                         e)
+            # the stream is corrupt beyond resync: discard this
+            # connection's buffered bytes (FrameDecoder.reset) so nothing
+            # re-parses them, then drop only this client — other
+            # connections keep their own decoders and never notice
+            dropped = conn.decoder.reset()
+            _log.warning("socket_serve: protocol error, dropping client "
+                         "(%d buffered bytes discarded): %s", dropped, e)
             self._drop(conn)
 
     # ---------------------------------------------------------------- loop
@@ -295,11 +367,27 @@ class SpikeClient:
         self._next_id = 0
         self.results: dict[int, np.ndarray] = {}
         self.rejections: dict[int, str] = {}
+        self.admin_replies: dict[int, dict] = {}
 
-    def send(self, stream, slack: float = math.inf) -> int:
+    def send(self, stream, slack: float = math.inf, *,
+             model: str | None = None,
+             version: int = ingest.VERSION) -> int:
+        """Stream one request.  ``model`` routes to that tenant (v2);
+        ``version=1`` emits a legacy frame (no model id — exercises the
+        default-model compatibility path)."""
         req_id = self._next_id
         self._next_id += 1
-        self.sock.sendall(ingest.encode_request(req_id, stream, slack))
+        self.sock.sendall(ingest.encode_request(req_id, stream, slack,
+                                                model=model,
+                                                version=version))
+        return req_id
+
+    def admin(self, body: dict) -> int:
+        """Send a control-plane request (e.g. ``{"op": "swap", "model":
+        ..., ...}``); the reply lands in :attr:`admin_replies`."""
+        req_id = self._next_id
+        self._next_id += 1
+        self.sock.sendall(ingest.encode_admin(req_id, body))
         return req_id
 
     def _pump(self) -> None:
@@ -313,13 +401,18 @@ class SpikeClient:
             elif frame.kind == ingest.KIND_REJECT:
                 req_id, reason = ingest.decode_rejection(frame.payload)
                 self.rejections[req_id] = reason
+            elif frame.kind == ingest.KIND_ADMIN:
+                req_id, body = ingest.decode_admin(frame.payload)
+                self.admin_replies[req_id] = body
             else:
                 raise ingest.ProtocolError(
                     f"server sent frame kind {frame.kind}")
 
     def recv_all(self) -> None:
-        """Block until every sent request has a result or a rejection."""
-        while len(self.results) + len(self.rejections) < self._next_id:
+        """Block until every sent request has a result, a rejection, or an
+        admin reply."""
+        while (len(self.results) + len(self.rejections)
+               + len(self.admin_replies)) < self._next_id:
             self._pump()
 
     def close(self) -> None:
@@ -334,6 +427,11 @@ def main():
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="mlp", choices=["mlp", "conv"])
+    ap.add_argument("--models", default=None,
+                    help="comma-separated demo model kinds (e.g. mlp,conv): "
+                         "serve them as a multi-tenant fabric, one tenant "
+                         "per name, with ADMIN hot-swap enabled; overrides "
+                         "--model")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=7473)
     ap.add_argument("--data", type=int, default=None,
@@ -360,36 +458,96 @@ def main():
     from repro.core.noise import AnalogNoise  # after jax device spoof
 
     mesh = snn_serve_mesh(args.data)
-    model = build_demo_model(args.model, smoke=args.smoke)
-    packed = model.pack()
-    policy = BucketPolicy.for_mesh(mesh.size)
     noise = (AnalogNoise(weight_sigma=args.noise_sigma)
              if args.noise_sigma > 0 else None)
     slo = (SLOPolicy(target_miss_rate=args.slo_target)
            if args.slo_target is not None else None)
-    srv = SpikeSocketServer(
-        packed, policy=policy, host=args.host, port=args.port, mesh=mesh,
-        queue_capacity=args.queue_capacity, backpressure=args.backpressure,
-        default_slack=args.default_slack, noise=noise, slo=slo)
+
+    def model_factory(spec: dict):
+        """ADMIN swap body -> new packed weights: {"op": "swap", "model":
+        <tenant>, "kind": mlp|conv (default: the tenant name), "seed": n}"""
+        kind = spec.get("kind", spec.get("model", args.model))
+        if kind not in ("mlp", "conv"):
+            raise ValueError(f"unknown demo model kind {kind!r}")
+        return build_demo_model(kind, smoke=args.smoke,
+                                seed=int(spec.get("seed", 0))).pack()
+
+    kinds = ([k.strip() for k in args.models.split(",") if k.strip()]
+             if args.models else None)
+    if kinds:
+        registry = ModelRegistry()
+        for kind in kinds:
+            registry.register(
+                kind, build_demo_model(kind, smoke=args.smoke).pack(),
+                policy=BucketPolicy.for_mesh(mesh.size), noise=noise)
+        srv = SpikeSocketServer(
+            registry, host=args.host, port=args.port, mesh=mesh,
+            queue_capacity=args.queue_capacity,
+            backpressure=args.backpressure,
+            default_slack=args.default_slack, slo=slo,
+            model_factory=model_factory)
+        label = "+".join(kinds)
+    else:
+        packed = build_demo_model(args.model, smoke=args.smoke).pack()
+        srv = SpikeSocketServer(
+            packed, policy=BucketPolicy.for_mesh(mesh.size),
+            host=args.host, port=args.port, mesh=mesh,
+            queue_capacity=args.queue_capacity,
+            backpressure=args.backpressure,
+            default_slack=args.default_slack, noise=noise, slo=slo,
+            model_factory=model_factory)
+        label = args.model
     host, port = srv.address
-    print(f"socket-serve/{args.model}: listening on {host}:{port} "
-          f"({mesh.size}-way mesh, buckets<={policy.n_buckets})")
+    names = srv.server.registry.names()
+    print(f"socket-serve/{label}: listening on {host}:{port} "
+          f"({mesh.size}-way mesh, {len(names)} tenant(s): "
+          f"{', '.join(names)})")
 
     if args.smoke:
         # best-effort requests: full buckets dispatch inline, the remainder
         # rides the idle-flush path — no deadline misses from cold-jit wall
-        # time polluting a liveness check
-        streams = synth_requests(12, packed.n_in, t_hi=12, seed=1)
-        with serving_thread(srv, max_requests=len(streams)):
+        # time polluting a liveness check.  Multi-tenant smoke: traffic to
+        # every tenant (plus one legacy v1 frame on the default route), a
+        # live ADMIN hot-swap of the first tenant, then traffic onto the
+        # swapped-in weights.
+        per_model = 6
+        plan = []        # (model | None, version, stream) per request
+        for name in names:
+            n_in = srv.server.registry.get(name).packed.n_in
+            for i, s in enumerate(synth_requests(per_model, n_in,
+                                                 t_hi=12, seed=1)):
+                # first request of the default tenant goes out as a v1
+                # frame: the pre-registry protocol must still be served
+                legacy = (name == srv.server.registry.default and i == 0)
+                plan.append((None if legacy else name,
+                             1 if legacy else ingest.VERSION, s))
+        swap_tenant = names[0]
+        swap_kind = kinds[0] if kinds else args.model
+        post_swap = synth_requests(
+            per_model, srv.server.registry.get(swap_tenant).packed.n_in,
+            t_hi=12, seed=2)
+        n_results = len(plan) + len(post_swap)
+        with serving_thread(srv, max_requests=n_results):
             cli = SpikeClient(host, port)
-            for s in streams:
-                cli.send(s)
+            for model, version, s in plan:
+                cli.send(s, model=model, version=version)
+            adm = cli.admin({"op": "swap", "model": swap_tenant,
+                             "kind": swap_kind, "seed": 1})
+            for s in post_swap:
+                cli.send(s, model=swap_tenant)
             cli.recv_all()
             cli.close()
         snap = srv.server.metrics.snapshot()
-        assert len(cli.results) == len(streams), \
-            f"served {len(cli.results)}/{len(streams)}"
-        print(f"socket-serve smoke: {snap['completed']} served, "
+        assert len(cli.results) == n_results, \
+            f"served {len(cli.results)}/{n_results}"
+        reply = cli.admin_replies[adm]
+        assert reply.get("ok") and reply.get("generation") == 2, reply
+        assert snap["hot_swaps"] == 1 and snap["rejected"] == 0, snap
+        per_done = ", ".join(
+            f"{n}={mm['completed']}" for n, mm in snap["per_model"].items())
+        print(f"socket-serve smoke: {snap['completed']} served across "
+              f"{snap['models']} tenant(s) ({per_done}), "
+              f"{snap['hot_swaps']} hot-swap, "
               f"p50 latency {snap['p50_latency_s']*1e3:.1f} ms, "
               f"miss rate {snap['deadline_miss_rate']:.3f}")
         return

@@ -12,7 +12,8 @@ import re
 import subprocess
 import sys
 
-from repro.engine import METRIC_KEYS, SCENARIOS, TELEMETRY_KEYS
+from repro.engine import (METRIC_KEYS, PER_MODEL_KEYS, SCENARIOS,
+                          TELEMETRY_KEYS)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SERVING_MD = os.path.join(REPO, "docs", "SERVING.md")
@@ -44,6 +45,16 @@ def test_metric_keys_table_matches_code():
     assert doc == METRIC_KEYS, (
         f"docs/SERVING.md metrics table is out of sync with METRIC_KEYS\n"
         f"  documented: {doc}\n  code:       {METRIC_KEYS}")
+
+
+def test_per_model_keys_table_matches_code():
+    """The per-tenant metrics table is schema-locked like the fabric-wide
+    one — the multi-tenant dashboard surface."""
+    doc = _table_keys(_serving_md(), "### Per-model snapshot keys")
+    assert doc == PER_MODEL_KEYS, (
+        f"docs/SERVING.md per-model table is out of sync with "
+        f"PER_MODEL_KEYS\n  documented: {doc}\n  code:       "
+        f"{PER_MODEL_KEYS}")
 
 
 def test_telemetry_keys_table_matches_code():

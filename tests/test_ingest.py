@@ -30,17 +30,50 @@ def test_request_roundtrip_bit_exact(rng):
         frame = ingest.FrameDecoder().feed(
             ingest.encode_request(7, stream, 0.25))[0]
         assert frame.kind == ingest.KIND_REQUEST
-        req_id, out, slack = ingest.decode_request(frame.payload)
-        assert req_id == 7 and slack == 0.25
+        req_id, out, slack, model = ingest.decode_request(frame.payload)
+        assert req_id == 7 and slack == 0.25 and model is None
         assert out.shape == (t, n)
         assert np.array_equal(out, stream)
+
+
+def test_request_roundtrip_carries_model_name(rng):
+    """v2 frames route to a named tenant; the name survives utf-8 intact."""
+    stream = _raster(rng, 6, 10)
+    frame = ingest.FrameDecoder().feed(
+        ingest.encode_request(9, stream, 0.5, model="conv-µ"))[0]
+    assert frame.version == ingest.VERSION
+    req_id, out, slack, model = ingest.decode_request(frame.payload)
+    assert (req_id, slack, model) == (9, 0.5, "conv-µ")
+    assert np.array_equal(out, stream)
+    assert ingest.peek_request(frame.payload) == (9, 6, 10, 0.5, "conv-µ")
+
+
+def test_v1_request_roundtrip_still_accepted(rng):
+    """Deployed v1 sensors keep working: no model id on the wire, decoded
+    as model=None (the registry default)."""
+    stream = _raster(rng, 5, 8)
+    frame = ingest.FrameDecoder().feed(
+        ingest.encode_request(4, stream, 2.0, version=1))[0]
+    assert frame.version == 1
+    req_id, out, slack, model = ingest.decode_request(frame.payload,
+                                                      frame.version)
+    assert (req_id, slack, model) == (4, 2.0, None)
+    assert np.array_equal(out, stream)
+    # v1 cannot carry a model id; asking for one is a caller bug.
+    with pytest.raises(ingest.ProtocolError, match="v1"):
+        ingest.encode_request(4, stream, model="mlp", version=1)
+
+
+def test_model_name_over_255_bytes_rejected(rng):
+    with pytest.raises(ingest.ProtocolError, match="255"):
+        ingest.encode_request(0, _raster(rng, 2, 2), model="x" * 256)
 
 
 def test_request_default_slack_is_inf(rng):
     frame = ingest.FrameDecoder().feed(
         ingest.encode_request(0, _raster(rng, 4, 5)))[0]
     assert frame.kind == ingest.KIND_REQUEST
-    _, _, slack = ingest.decode_request(frame.payload)
+    _, _, slack, _ = ingest.decode_request(frame.payload)
     assert math.isinf(slack)
 
 
@@ -50,9 +83,14 @@ def test_peek_request_reads_header_without_unpacking(rng):
     still reject truncated headers."""
     frame = ingest.FrameDecoder().feed(
         ingest.encode_request(3, _raster(rng, 5, 9), 1.5))[0]
-    assert ingest.peek_request(frame.payload) == (3, 5, 9, 1.5)
+    assert ingest.peek_request(frame.payload) == (3, 5, 9, 1.5, None)
     with pytest.raises(ingest.ProtocolError):
         ingest.peek_request(frame.payload[:8])
+    # A claimed name length past the end of the payload is corruption,
+    # not an index error.
+    with pytest.raises(ingest.ProtocolError, match="name truncated"):
+        ingest.peek_request(frame.payload[:ingest._REQ_HEAD_V2.size - 1]
+                            + b"\xff")
 
 
 def test_result_roundtrip_bit_exact(rng):
@@ -72,6 +110,23 @@ def test_rejection_roundtrip():
         (3, "queue_full: capacity 8")
 
 
+def test_admin_roundtrip():
+    """The control plane is JSON over an ADMIN frame, req_id echoed."""
+    body = {"op": "swap", "model": "mlp", "seed": 3}
+    frame = ingest.FrameDecoder().feed(ingest.encode_admin(11, body))[0]
+    assert frame.kind == ingest.KIND_ADMIN
+    assert ingest.decode_admin(frame.payload) == (11, body)
+
+
+def test_admin_rejects_non_json_and_non_object():
+    with pytest.raises(ingest.ProtocolError, match="JSON"):
+        ingest.decode_admin(b"\x00\x00\x00\x01not json")
+    with pytest.raises(ingest.ProtocolError, match="object"):
+        ingest.decode_admin(b"\x00\x00\x00\x01[1, 2]")
+    with pytest.raises(ingest.ProtocolError, match="truncated"):
+        ingest.decode_admin(b"\x00\x00")
+
+
 # ------------------------------------------------------ incremental decode
 
 def test_decoder_handles_arbitrary_chunk_boundaries(rng):
@@ -88,7 +143,7 @@ def test_decoder_handles_arbitrary_chunk_boundaries(rng):
         assert len(frames) == 5
         assert dec.pending_bytes == 0
         for i, frame in enumerate(frames):
-            req_id, stream, slack = ingest.decode_request(frame.payload)
+            req_id, stream, slack, _ = ingest.decode_request(frame.payload)
             assert req_id == i and slack == float(i)
             assert stream.shape == (3 + i, 11)
 
@@ -133,3 +188,20 @@ def test_truncated_payloads_raise(rng):
         ingest.decode_result(b"\x00\x00")
     with pytest.raises(ingest.ProtocolError):
         ingest.decode_rejection(b"\x01")
+
+
+def test_decoder_reset_recovers_after_corruption(rng):
+    """A length-prefixed stream cannot resync after corruption: the bad
+    bytes stay buffered and every later feed re-raises — until reset()
+    discards them, after which the decoder parses clean frames again."""
+    dec = ingest.FrameDecoder()
+    with pytest.raises(ingest.ProtocolError):
+        dec.feed(b"XX" + b"\x00" * 10)
+    good = ingest.encode_request(5, _raster(rng, 3, 4), 1.0)
+    with pytest.raises(ingest.ProtocolError):
+        dec.feed(good)                   # still poisoned by buffered bytes
+    assert dec.reset() > 0               # reports how much it threw away
+    frames = dec.feed(good)              # same decoder, clean slate
+    assert len(frames) == 1
+    assert ingest.peek_request(frames[0].payload)[0] == 5
+    assert dec.reset() == 0              # idempotent on an empty buffer

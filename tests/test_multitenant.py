@@ -1,0 +1,461 @@
+"""Multi-tenant serving fabric: registry, routing, hot-swap, fair share.
+
+Contracts under test (engine/registry.py + the multi-tenant parts of
+engine/stream_server.py and launch/socket_serve.py):
+
+  * the registry is the single source of truth for named tenants — typed
+    errors for unknown names, duplicate registration refused, hot-swap
+    bumps the generation and inherits policy/noise/weight unless
+    overridden;
+  * routing is bit-exact: a request submitted under a model name is
+    served by exactly that tenant's weights, identical to ``run_batched``
+    on that model alone, regardless of how tenants interleave;
+  * hot-swap loses nothing: requests admitted before ``swap()`` are
+    served on the OLD weights (drained at the swap point), requests after
+    on the NEW — under live traffic, with zero rejects and zero drops;
+  * per-tenant isolation: EWMA service estimates key by model (and clear
+    per tenant), backpressure sheds the flooding tenant's work, and a
+    burst from one tenant does not starve another's deadlines;
+  * the per-model metrics surface is schema-locked like every other
+    operator surface, and the socket front end routes v2 frames, defaults
+    v1 frames, answers ADMIN control frames, and isolates a corrupt
+    connection from its neighbours.
+"""
+
+import math
+import socket
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import map_model
+from repro.core.energy import AcceleratorSpec
+from repro.core.lif import LIFParams
+from repro.engine import (DEFAULT_MODEL, METRIC_KEYS, PER_MODEL_KEYS,
+                          BucketPolicy, ModelRegistry, ServerMetrics,
+                          StreamServer, UnknownModelError, VirtualClock,
+                          run_batched, serve_trace, trace_count)
+from repro.engine.chaos import SCENARIOS, run_scenario, swap_model_for
+
+SPEC = AcceleratorSpec("tenant-test", n_cores=3, n_engines=4, n_caps=8,
+                       weight_mem_bytes=1 << 18)
+
+
+def _model(rng, sizes=(14, 12, 6)):
+    ws = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 0.5, (sizes[i], sizes[i + 1])).astype(np.float32)
+        w[rng.random(w.shape) > 0.6] = 0
+        ws.append(w)
+    return map_model(ws, SPEC, lif=LIFParams(beta=0.8, threshold=0.7))
+
+
+@pytest.fixture(scope="module")
+def packed_a():
+    return _model(np.random.default_rng(7)).pack()
+
+
+@pytest.fixture(scope="module")
+def packed_a2():
+    """Same layer shapes as packed_a, different weights — a hot-swap
+    payload that needs no new jit traces."""
+    return _model(np.random.default_rng(8)).pack()
+
+
+@pytest.fixture(scope="module")
+def packed_b():
+    return _model(np.random.default_rng(9), sizes=(11, 10, 5)).pack()
+
+
+def _policy():
+    return BucketPolicy(batch_sizes=(1, 2, 4), time_steps=(4, 8))
+
+
+def _streams(rng, n_in, lengths, p=0.35):
+    return [(rng.random((t, n_in)) < p).astype(np.float32) for t in lengths]
+
+
+def _registry(packed_a, packed_b):
+    reg = ModelRegistry()
+    reg.register("alpha", packed_a, policy=_policy())
+    reg.register("beta", packed_b, policy=_policy())
+    return reg
+
+
+def _ref(packed, stream):
+    return run_batched(packed, stream[None],
+                       with_stats=False).out_spikes[0][:stream.shape[0]]
+
+
+# ---------------------------------------------------------------- registry
+
+def test_registry_register_get_default(packed_a, packed_b):
+    reg = _registry(packed_a, packed_b)
+    assert len(reg) == 2 and set(reg.names()) == {"alpha", "beta"}
+    assert "alpha" in reg and "gamma" not in reg
+    assert reg.get("beta").packed is packed_b
+    # first registration is the default route unless told otherwise
+    assert reg.default == "alpha"
+    assert reg.get().packed is packed_a
+    assert reg.get(None).name == "alpha"
+    reg2 = ModelRegistry(default="beta")
+    reg2.register("alpha", packed_a, policy=_policy())
+    reg2.register("beta", packed_b, policy=_policy())
+    assert reg2.get().name == "beta"
+
+
+def test_registry_unknown_model_error_is_typed_and_names_known(packed_a,
+                                                               packed_b):
+    reg = _registry(packed_a, packed_b)
+    with pytest.raises(UnknownModelError) as ei:
+        reg.get("gamma")
+    assert ei.value.name == "gamma"
+    assert set(ei.value.known) == {"alpha", "beta"}
+    assert "gamma" in str(ei.value) and "alpha" in str(ei.value)
+    with pytest.raises(UnknownModelError):
+        ModelRegistry().get()           # empty registry has no default
+
+
+def test_registry_refuses_duplicates_and_empty_names(packed_a):
+    reg = ModelRegistry()
+    reg.register("alpha", packed_a, policy=_policy())
+    with pytest.raises(ValueError, match="swap"):
+        reg.register("alpha", packed_a, policy=_policy())
+    with pytest.raises(ValueError):
+        reg.register("", packed_a, policy=_policy())
+    with pytest.raises(ValueError):
+        reg.register("x", packed_a, policy=_policy(), weight=0.0)
+
+
+def test_registry_swap_bumps_generation_and_inherits(packed_a, packed_a2):
+    reg = ModelRegistry()
+    reg.register("alpha", packed_a, policy=_policy(), weight=2.5)
+    e1 = reg.get("alpha")
+    assert e1.generation == 1
+    e2 = reg.swap("alpha", packed_a2)
+    assert e2.generation == 2 and e2.packed is packed_a2
+    assert e2.weight == 2.5                      # inherited
+    assert e2.policy == e1.policy                # inherited
+    assert reg.get("alpha") is e2                # atomically installed
+    with pytest.raises(UnknownModelError):
+        reg.swap("gamma", packed_a2)
+
+
+def test_registry_packs_mapped_models(rng):
+    """register() accepts a MappedModel and packs it — callers hold one
+    object, the registry normalizes to the engine's PackedModel."""
+    mapped = _model(rng)
+    reg = ModelRegistry()
+    entry = reg.register("m", mapped, policy=_policy())
+    assert entry.packed.n_in == 14
+    assert hasattr(entry.packed, "layers")       # PackedModel, not Mapped
+
+
+# ----------------------------------------------------------------- routing
+
+def test_routing_bit_exact_across_interleaved_tenants(rng, packed_a,
+                                                      packed_b):
+    """Interleaved submits to two tenants each serve on exactly their own
+    weights — bit-identical to run_batched per model."""
+    server = StreamServer(_registry(packed_a, packed_b),
+                          clock=VirtualClock(), with_stats=False)
+    sa = _streams(rng, 14, [3, 7, 5, 8])
+    sb = _streams(rng, 11, [4, 6, 2, 8])
+    rids = []
+    for a, b in zip(sa, sb):
+        rids.append(("alpha", a, server.submit(a, model="alpha")))
+        rids.append(("beta", b, server.submit(b, model="beta")))
+    done = dict(server.flush())
+    assert len(done) == len(rids)
+    for name, s, rid in rids:
+        ref = _ref({"alpha": packed_a, "beta": packed_b}[name], s)
+        assert np.array_equal(done[rid].out_spikes, ref), \
+            f"{name} rid {rid} served on the wrong tenant's weights"
+    snap = server.metrics.snapshot()
+    assert snap["models"] == 2
+    assert snap["per_model"]["alpha"]["completed"] == len(sa)
+    assert snap["per_model"]["beta"]["completed"] == len(sb)
+
+
+def test_submit_unknown_model_raises_before_side_effects(rng, packed_a,
+                                                         packed_b):
+    server = StreamServer(_registry(packed_a, packed_b),
+                          clock=VirtualClock())
+    with pytest.raises(UnknownModelError, match="gamma"):
+        server.submit(_streams(rng, 14, [4])[0], model="gamma")
+    snap = server.metrics.snapshot()
+    assert snap["submitted"] == 0 and snap["rejected"] == 0
+
+
+def test_bad_shape_error_names_the_tenant(rng, packed_a, packed_b):
+    server = StreamServer(_registry(packed_a, packed_b),
+                          clock=VirtualClock())
+    with pytest.raises(ValueError, match="beta"):
+        server.submit(_streams(rng, 14, [4])[0], model="beta")
+
+
+def test_single_tenant_constructor_still_works(rng, packed_a):
+    """The pre-registry constructor (packed + policy kwarg) builds a
+    one-tenant fabric under the default route — the whole existing
+    single-model surface is this path."""
+    server = StreamServer(packed_a, policy=_policy(), clock=VirtualClock())
+    assert server.registry.default == DEFAULT_MODEL
+    assert server.packed is packed_a
+    s = _streams(rng, 14, [5])[0]
+    rid = server.submit(s)                       # no model name
+    done = dict(server.flush())
+    assert np.array_equal(done[rid].out_spikes, _ref(packed_a, s))
+
+
+# ------------------------------------------------------ per-tenant isolation
+
+def test_ewma_keyed_by_model_and_cleared_per_tenant(rng, packed_a,
+                                                    packed_b):
+    server = StreamServer(_registry(packed_a, packed_b),
+                          clock=VirtualClock())
+    for s in _streams(rng, 14, [3, 7]):
+        server.submit(s, model="alpha")
+    for s in _streams(rng, 11, [3, 7]):
+        server.submit(s, model="beta")
+    server.flush()
+    names = {k[0] for k in server._ewma}
+    assert names == {"alpha", "beta"}, \
+        "service estimates must key by tenant, not just bucket shape"
+    server.clear_service_estimates("alpha")
+    assert {k[0] for k in server._ewma} == {"beta"}
+    server.clear_service_estimates()             # and all at once
+    assert server._ewma == {}
+
+
+def test_shed_oldest_targets_the_flooding_tenant(rng, packed_a, packed_b):
+    """Backpressure by displacement picks its victim from the tenant with
+    the deepest backlog — a quiet tenant's lone request survives a
+    neighbour's flood."""
+    server = StreamServer(_registry(packed_a, packed_b),
+                          clock=VirtualClock(), queue_capacity=4,
+                          backpressure="shed_oldest",
+                          service_model=lambda b, t: 0.001)
+    quiet = server.submit(_streams(rng, 14, [5])[0], model="alpha")
+    flood = [server.submit(s, model="beta")
+             for s in _streams(rng, 11, [5] * 7)]
+    done = dict(server.flush())
+    assert quiet in done, "quiet tenant's request was evicted by the flood"
+    shed = [r for r in server.rejections if r.reason == "shed"]
+    assert shed and all(r.model == "beta" for r in shed), \
+        f"shed victims must come from the flooding tenant: {shed}"
+    snap = server.metrics.snapshot()
+    assert snap["per_model"]["alpha"]["shed"] == 0
+    assert snap["per_model"]["beta"]["shed"] == len(shed)
+    assert flood.count(None) == 0                # shed displaces, not rejects
+
+
+def test_burst_does_not_starve_other_tenants_deadlines(rng, packed_a,
+                                                       packed_b):
+    """Weighted-fair pick under contention: a best-effort flood from one
+    tenant queued ahead of another tenant's deadline work must not push
+    the latter past its slack."""
+    server = StreamServer(_registry(packed_a, packed_b),
+                          clock=VirtualClock(), queue_capacity=64,
+                          service_model=lambda b, t: 0.004)
+    trace = [(0.0, s, None, "beta") for s in _streams(rng, 11, [8] * 12)]
+    trace += [(0.001 * (i + 1), s, 0.001 * (i + 1) + 0.05, "alpha")
+              for i, s in enumerate(_streams(rng, 14, [4, 4, 4]))]
+    trace.sort(key=lambda e: e[0])
+    serve_trace(server, trace)
+    snap = server.metrics.snapshot()
+    alpha = snap["per_model"]["alpha"]
+    assert alpha["completed"] == 3 and alpha["deadline_misses"] == 0, \
+        f"flooded out of its deadlines: {alpha}"
+    assert snap["per_model"]["beta"]["completed"] == 12
+
+
+# ---------------------------------------------------------------- hot-swap
+
+def test_hot_swap_under_live_traffic_is_bit_exact(rng, packed_a, packed_a2,
+                                                  packed_b):
+    """The swap drains in-flight work on the OLD weights and routes every
+    later submit to the NEW — zero drops, zero rejects, every result
+    bit-exact against the weights that were live when it was admitted.
+    The other tenant is untouched throughout."""
+    server = StreamServer(_registry(packed_a, packed_b),
+                          clock=VirtualClock(), with_stats=False,
+                          service_model=lambda b, t: 0.002)
+    swap_t = 0.05
+    pre = [(0.01 * i, s, None, "alpha")
+           for i, s in enumerate(_streams(rng, 14, [3, 7, 5]))]
+    post = [(swap_t + 0.01 * (i + 1), s, None, "alpha")
+            for i, s in enumerate(_streams(rng, 14, [5, 3, 8]))]
+    other = [(0.015 + 0.02 * i, s, None, "beta")
+             for i, s in enumerate(_streams(rng, 11, [4, 6, 5]))]
+    trace = sorted(pre + post + other, key=lambda e: e[0])
+    control = [(swap_t, lambda srv: srv.swap("alpha", packed_a2))]
+    results, rids = serve_trace(server, trace, control=control)
+    assert None not in rids, "hot-swap dropped or rejected a request"
+    assert len(results) == len(trace)
+    for (t_a, s, _, name), rid in zip(trace, rids):
+        if name == "beta":
+            live = packed_b
+        elif t_a < swap_t:
+            live = packed_a               # admitted before the swap: drained
+        else:
+            live = packed_a2              # admitted after: new generation
+        assert np.array_equal(results[rid].out_spikes, _ref(live, s)), \
+            f"request at t={t_a} ({name}) served on the wrong generation"
+    snap = server.metrics.snapshot()
+    assert snap["rejected"] == 0 and snap["shed"] == 0
+    assert snap["hot_swaps"] == 1
+    assert snap["per_model"]["alpha"]["hot_swaps"] == 1
+    assert snap["per_model"]["beta"]["hot_swaps"] == 0
+    assert server.registry.get("alpha").generation == 2
+
+
+def test_swap_does_not_eat_uncollected_results(rng, packed_a, packed_a2):
+    """Results completed before the swap (but not yet collected) survive
+    it — the drain must append to the completion queue, not replace it."""
+    server = StreamServer(packed_a, policy=_policy(), clock=VirtualClock())
+    early = [server.submit(s)
+             for s in _streams(rng, 14, [4] * 4)]   # full group: dispatches
+    late = server.submit(_streams(rng, 14, [6])[0])  # still pending
+    server.swap(DEFAULT_MODEL, packed_a2)
+    done = dict(server.collect())
+    assert set(early + [late]) <= set(done), \
+        "swap() lost results that completed before it ran"
+
+
+def test_same_shape_swap_adds_no_jit_traces(rng, packed_a, packed_a2):
+    """A swap to same-shaped weights reuses every compiled bucket — the
+    whole point of bucketed serving is that weights are arguments, not
+    constants."""
+    server = StreamServer(packed_a, policy=_policy(), clock=VirtualClock())
+    for s in _streams(rng, 14, [3, 7]):
+        server.submit(s)
+    server.flush()
+    n0 = trace_count()
+    server.swap(DEFAULT_MODEL, packed_a2)
+    for s in _streams(rng, 14, [3, 7]):
+        server.submit(s)
+    server.flush()
+    assert trace_count() == n0, \
+        "hot-swap to same-shaped weights must not retrace"
+
+
+# ------------------------------------------------------------ metrics schema
+
+def test_per_model_metrics_schema_locked():
+    """The per-tenant snapshot keys are the BENCH_multitenant.json and
+    docs/SERVING.md surface — locked like METRIC_KEYS."""
+    assert PER_MODEL_KEYS == (
+        "submitted", "admitted", "rejected", "shed", "completed",
+        "deadline_misses", "deadline_miss_rate", "dispatches", "hot_swaps",
+        "p50_latency_s", "p99_latency_s")
+    m = ServerMetrics()
+    snap = m.model("x").snapshot()
+    assert tuple(snap.keys()) == PER_MODEL_KEYS
+    assert snap["deadline_miss_rate"] == 0.0
+    full = m.snapshot()
+    assert tuple(full.keys()) == METRIC_KEYS
+    assert full["per_model"] == {"x": snap} and full["models"] == 1
+
+
+# ----------------------------------------------------------- chaos scenario
+
+def test_multi_tenant_scenario_gates(packed_a):
+    """The soak scenario's promises: both tenants conserved (nothing lost),
+    the mid-soak hot-swap fired, and the adversarial burst did not starve
+    the steady tenant's deadlines."""
+    sc = SCENARIOS["multi_tenant"]
+    assert sc.tenants and sc.swap_tenant == "steady"
+    _, _, m = run_scenario(packed_a, sc)
+    assert m["hot_swaps"] == 1
+    assert m["completed"] + m["rejected"] + m["shed"] == m["requests"]
+    per = m["per_model"]
+    assert set(per) == {t.name for t in sc.tenants}
+    for name, mm in per.items():
+        assert mm["submitted"] == \
+            mm["admitted"] + mm["rejected"], f"{name} lost admissions"
+        assert mm["admitted"] == mm["completed"] + mm["shed"], \
+            f"{name} lost requests: {mm}"
+    assert per["steady"]["hot_swaps"] == 1
+    assert per["steady"]["deadline_miss_rate"] <= 0.05, \
+        f"bursty tenant starved steady's deadlines: {per['steady']}"
+    # the swap payload is deterministic — the bench re-derives it
+    import jax
+    l1 = jax.tree_util.tree_leaves(swap_model_for(packed_a, sc))
+    l2 = jax.tree_util.tree_leaves(swap_model_for(packed_a, sc))
+    assert len(l1) == len(l2)
+    assert all(np.array_equal(a, b) for a, b in zip(l1, l2))
+
+
+# ------------------------------------------------------------- live socket
+
+def test_socket_routes_tenants_and_hot_swaps_via_admin(rng, packed_a,
+                                                       packed_a2, packed_b):
+    """End to end over a real connection: v2 frames route by name, a v1
+    frame routes to the default tenant, ADMIN list enumerates the fabric,
+    ADMIN swap installs new weights through the model factory, and every
+    result is bit-exact against the weights live at admission."""
+    from repro.launch.socket_serve import (SpikeClient, SpikeSocketServer,
+                                           serving_thread)
+    srv = SpikeSocketServer(_registry(packed_a, packed_b), port=0,
+                            model_factory=lambda spec: packed_a2)
+    host, port = srv.address
+    sa = _streams(rng, 14, [3, 7, 5])
+    sb = _streams(rng, 11, [4, 6])
+    post = _streams(rng, 14, [5, 8])
+    n_results = len(sa) + len(sb) + len(post)
+    with serving_thread(srv, max_requests=n_results, idle_flush_s=0.05):
+        cli = SpikeClient(host, port, timeout=60)
+        pre_ids = [cli.send(s, model="alpha") for s in sa[:-1]]
+        pre_ids.append(cli.send(sa[-1], version=1))   # v1 → default (alpha)
+        b_ids = [cli.send(s, model="beta") for s in sb]
+        lst = cli.admin({"op": "list"})
+        unknown = cli.send(_streams(rng, 14, [4])[0], model="gamma")
+        adm = cli.admin({"op": "swap", "model": "alpha"})
+        post_ids = [cli.send(s, model="alpha") for s in post]
+        cli.recv_all()
+        cli.close()
+    reply = cli.admin_replies[lst]
+    assert reply["ok"] and reply["default"] == "alpha"
+    assert set(reply["models"]) == {"alpha", "beta"}
+    assert "unknown_model" in cli.rejections[unknown]
+    assert "gamma" in cli.rejections[unknown]
+    swap_reply = cli.admin_replies[adm]
+    assert swap_reply["ok"] and swap_reply["generation"] == 2, swap_reply
+    for req_id, s in zip(pre_ids, sa):
+        assert np.array_equal(cli.results[req_id], _ref(packed_a, s)), \
+            "pre-swap request not served on the old weights"
+    for req_id, s in zip(b_ids, sb):
+        assert np.array_equal(cli.results[req_id], _ref(packed_b, s))
+    for req_id, s in zip(post_ids, post):
+        assert np.array_equal(cli.results[req_id], _ref(packed_a2, s)), \
+            "post-swap request not served on the new weights"
+    snap = srv.server.metrics.snapshot()
+    assert snap["hot_swaps"] == 1 and snap["completed"] == n_results
+
+
+def test_socket_corrupt_frame_drops_only_that_connection(rng, packed_a,
+                                                         packed_b):
+    """Satellite contract: a corrupt frame poisons one connection's
+    decoder, and only that connection dies — its buffer is reset and
+    dropped, while a healthy neighbour keeps serving bit-exact."""
+    from repro.launch.socket_serve import (SpikeClient, SpikeSocketServer,
+                                           serving_thread)
+    srv = SpikeSocketServer(_registry(packed_a, packed_b), port=0)
+    host, port = srv.address
+    good_streams = _streams(rng, 14, [5, 3])
+    with serving_thread(srv, max_requests=len(good_streams),
+                        idle_flush_s=0.05):
+        bad = SpikeClient(host, port, timeout=60)
+        good = SpikeClient(host, port, timeout=60)
+        bad.sock.sendall(b"XX" + b"\x00" * 30)       # corrupt magic
+        ids = [good.send(s, model="alpha") for s in good_streams]
+        good.recv_all()
+        # the offender is disconnected, not answered
+        bad.sock.settimeout(30)
+        assert bad.sock.recv(1 << 10) == b"", \
+            "server kept a connection whose stream cannot resync"
+        bad.close()
+        good.close()
+    for req_id, s in zip(ids, good_streams):
+        assert np.array_equal(good.results[req_id], _ref(packed_a, s)), \
+            "healthy connection corrupted by a neighbour's garbage"

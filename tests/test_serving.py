@@ -236,11 +236,13 @@ def test_server_metrics_schema_locked():
         "forced_dispatches", "policy_extensions", "queue_depth",
         "max_queue_depth", "bucket_fill_ratio", "p50_ttfd_s", "p99_ttfd_s",
         "p50_latency_s", "p99_latency_s", "device_losses", "slo_switches",
-        "slo_shedding", "noise_probes", "noise_agreement")
+        "slo_shedding", "noise_probes", "noise_agreement", "models",
+        "hot_swaps", "per_model")
     snap = ServerMetrics().snapshot()
     assert tuple(snap.keys()) == METRIC_KEYS
     assert snap["deadline_miss_rate"] == 0.0      # no div-by-zero when idle
     assert snap["noise_agreement"] == 1.0         # no probes = no evidence
+    assert snap["per_model"] == {} and snap["models"] == 0
 
 
 # ------------------------------------------------- over-long requests
