@@ -21,15 +21,20 @@ scenario scripts (:mod:`repro.engine.chaos`):
       [--out BENCH_soak.json] [--spoof-devices 2]
 
 Gates (CI fails loudly on regression):
-  * every scenario replay is deterministic (two runs, identical metrics);
+  * every scenario replay is deterministic (two runs, identical metrics
+    AND byte-identical flight-recorder ``dump_json()`` — the tracing
+    determinism contract of docs/OBSERVABILITY.md);
   * request conservation everywhere: completed + rejected + shed ==
     submitted — no request ever silently vanishes, chaos or not;
   * scripted faults actually landed: device-loss scenarios shrink the
     mesh with zero admitted requests lost, noise scenarios populate
-    ``noise_agreement``, the SLO scenario flips to shedding;
-  * the live soak serves through the socket with every request answered
-    and a spot request bit-exact vs ``run_batched`` on the same (noisy)
-    device instance.
+    ``noise_agreement``, the SLO scenario flips to shedding — and every
+    fault appears in the recorder as a typed anomaly whose count matches
+    the corresponding metric;
+  * the live soak serves through the socket with every request answered,
+    a spot request bit-exact vs ``run_batched`` on the same (noisy)
+    device instance, and the ADMIN ``metrics`` / ``trace`` verbs
+    round-tripping the schema-locked snapshot and recorder dump live.
 """
 
 from __future__ import annotations
@@ -47,7 +52,8 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core.noise import AnalogNoise  # noqa: E402
-from repro.engine import (BucketPolicy, run_batched, run_sharded,  # noqa: E402
+from repro.engine import (BucketPolicy, FlightRecorder,  # noqa: E402
+                          METRIC_KEYS, run_batched, run_sharded,
                           trace_count)
 from repro.engine.chaos import (SCENARIOS, make_chaos_hook,  # noqa: E402
                                 run_scenario, synth_arrival_trace)
@@ -63,6 +69,23 @@ _LIVE_LOSS = ((1, 1),)
 
 def _conserved(m: dict) -> bool:
     return m["completed"] + m["rejected"] + m["shed"] == m["submitted"]
+
+
+def _anomalies_match(tag: str, counts: dict, m: dict) -> None:
+    """Every fault the metrics counted must appear in the flight recorder
+    as a typed anomaly, one for one (docs/OBSERVABILITY.md anomaly
+    table)."""
+    flips = m["noise_probes"] - round(m["noise_agreement"]
+                                      * m["noise_probes"])
+    for kind, want in (("reject", m["rejected"]), ("shed", m["shed"]),
+                       ("policy_extension", m["policy_extensions"]),
+                       ("deadline_miss", m["deadline_misses"]),
+                       ("device_loss", m["device_losses"]),
+                       ("hot_swap_pin", m["hot_swaps"]),
+                       ("noise_disagreement", flips)):
+        got = counts.get(kind, 0)
+        assert got == want, \
+            f"{tag}: recorder saw {got} {kind} anomalies, metrics say {want}"
 
 
 def _scenario_row(m: dict) -> dict:
@@ -85,9 +108,15 @@ def bench_scenarios(packed, mesh) -> list[dict]:
             print(f"soak/scenario/{name}: SKIP (needs >= 2 devices)")
             rows.append({"scenario": name, "skipped": True})
             continue
-        _, _, m1 = run_scenario(packed, sc, mesh=mesh)
-        _, _, m2 = run_scenario(packed, sc, mesh=mesh)
+        rec1, rec2 = FlightRecorder(), FlightRecorder()
+        _, _, m1 = run_scenario(packed, sc, mesh=mesh, recorder=rec1)
+        _, _, m2 = run_scenario(packed, sc, mesh=mesh, recorder=rec2)
+        rec1.detach_jit_probe()
+        rec2.detach_jit_probe()
         assert m1 == m2, f"{name}: scenario replay is not deterministic"
+        assert rec1.dump_json() == rec2.dump_json(), \
+            f"{name}: flight-recorder dump is not replay-deterministic"
+        _anomalies_match(name, rec1.anomaly_counts, m1)
         assert _conserved(m1), f"{name}: request leak {m1}"
         if sc.lose_devices:
             assert m1["device_losses"] == len(sc.lose_devices), \
@@ -118,7 +147,9 @@ def bench_scenarios(packed, mesh) -> list[dict]:
               f"served | miss {m1['deadline_miss_rate']:.3f} | mesh "
               f"{m1['mesh_size_start']}->{m1['mesh_size_end']} | slo_sw "
               f"{m1['slo_switches']} | agree {m1['noise_agreement']:.3f}")
-        rows.append(_scenario_row(m1))
+        row = _scenario_row(m1)
+        row["anomalies"] = dict(sorted(rec1.anomaly_counts.items()))
+        rows.append(row)
     return rows
 
 
@@ -174,9 +205,21 @@ def live_soak(packed, mesh, *, smoke: bool, seed: int = 0) -> dict:
                 time.sleep(delay)
             cli.send(stream, slack=(deadline - t_a) * scale)
         cli.recv_all()
+        # observability round-trip while the server is still live: the
+        # schema-locked metrics snapshot and the full recorder dump
+        met = cli.admin({"op": "metrics"})
+        trc = cli.admin({"op": "trace"})
+        cli.recv_all()
         cli.close()
     wall = time.monotonic() - t0
     m = srv.server.metrics.snapshot()
+    mrep = cli.admin_replies[met]
+    assert mrep.get("ok") and set(mrep["metrics"]) == set(METRIC_KEYS), \
+        "live soak: ADMIN metrics reply is not schema-locked"
+    trep = cli.admin_replies[trc]
+    assert trep.get("ok") and trep["dump"]["n_completed"] == \
+        m["completed"], "live soak: ADMIN trace dump disagrees with metrics"
+    _anomalies_match("live soak", srv.tracer.anomaly_counts, m)
     answered = len(cli.results) + len(cli.rejections)
     assert answered == n_req, \
         f"live soak: {answered}/{n_req} requests answered over the socket"

@@ -7,6 +7,9 @@ from repro.engine.serving import (BucketPolicy, OverlongRequestError,  # noqa: F
                                   execute_plan, plan_batches, run_bucketed)
 from repro.engine.sharded_run import (DeviceLossError, run_sharded,  # noqa: F401
                                       shrink_mesh, snn_serve_mesh)
+from repro.engine.tracing import (ANOMALY_KINDS, FlightRecorder,  # noqa: F401
+                                  HIST_KEYS, Histogram, RequestTrace,
+                                  SPAN_KINDS, Span)
 from repro.engine.registry import (DEFAULT_MODEL, ModelEntry,  # noqa: F401
                                    ModelRegistry, UnknownModelError)
 from repro.engine.stream_server import (METRIC_KEYS, PER_MODEL_KEYS,  # noqa: F401

@@ -202,11 +202,34 @@ def trace_count() -> int:
     return _trace_count
 
 
-def _bump_trace() -> None:
+_trace_listeners: list = []
+
+
+def add_trace_listener(fn) -> None:
+    """Subscribe ``fn(kind, donated)`` to jit (re)trace events — called once
+    per compile of an engine forward (kind ``"batched"`` or ``"sharded"``).
+    The flight recorder's jit probe lives here; listeners must never raise
+    (a probe failure must not poison a compile)."""
+    if fn not in _trace_listeners:
+        _trace_listeners.append(fn)
+
+
+def remove_trace_listener(fn) -> None:
+    if fn in _trace_listeners:
+        _trace_listeners.remove(fn)
+
+
+def _bump_trace(kind: str = "batched", donated: bool = False) -> None:
     """Called from inside traced function bodies: python side effects execute
-    exactly once per (re)trace, which is precisely what we want to count."""
+    exactly once per (re)trace, which is precisely what we want to count.
+    Fans the event out to any registered trace listeners."""
     global _trace_count
     _trace_count += 1
+    for fn in list(_trace_listeners):
+        try:
+            fn(kind, donated)
+        except Exception:
+            pass
 
 
 def _lif_scan(currents: jax.Array, lif: LIFParams) -> jax.Array:
@@ -266,7 +289,7 @@ def _forward_impl(packed: PackedModel, spikes: jax.Array,
 @functools.partial(jax.jit, static_argnames=("max_events",))
 def _forward(packed: PackedModel, spikes: jax.Array,
              max_events: int | None) -> list[jax.Array]:
-    _bump_trace()
+    _bump_trace("batched")
     return _forward_impl(packed, spikes, max_events)
 
 
@@ -282,7 +305,7 @@ def _forward_donated(packed: PackedModel, spikes: jax.Array,
     compiled executable, not the call), chosen by ``run_batched(donate=)``;
     CPU XLA implements no donation, so the single-device default stays off
     there."""
-    _bump_trace()
+    _bump_trace("batched", donated=True)
     return _forward_impl(packed, spikes, max_events)
 
 

@@ -270,7 +270,7 @@ SCENARIOS: dict[str, ChaosScenario] = {s.name: s for s in (
 
 
 def run_scenario(model, scenario: ChaosScenario, *, mesh=None,
-                 policy: BucketPolicy | None = None):
+                 policy: BucketPolicy | None = None, recorder=None):
     """Replay one scenario deterministically on a :class:`VirtualClock`.
 
     The server's service times come from the scenario's constant
@@ -280,14 +280,21 @@ def run_scenario(model, scenario: ChaosScenario, *, mesh=None,
     bit-identical results and metrics (tested).  Returns ``(results, rids,
     metrics)`` where ``metrics`` is the ``ServerMetrics`` snapshot plus
     scenario bookkeeping (name, mesh sizes, makespan, admitted-served
-    accounting)."""
+    accounting).
+
+    ``recorder`` (a :class:`~repro.engine.tracing.FlightRecorder`) attaches
+    the span tracer to the replay: every injected fault then lands as a
+    typed anomaly and, because the replay runs on a VirtualClock, two
+    replays of the same scenario produce byte-identical
+    ``recorder.dump_json()`` — the soak harness's determinism gate."""
     packed = model if isinstance(model, br.PackedModel) else model.pack()
     if scenario.needs_mesh:
         assert mesh is not None and mesh.size >= 2, \
             f"scenario {scenario.name!r} scripts device loss — run it on a " \
             f">= 2-device mesh (--spoof-devices N on CPU)"
     if scenario.tenants:
-        return _run_multi_tenant(packed, scenario, mesh=mesh, policy=policy)
+        return _run_multi_tenant(packed, scenario, mesh=mesh, policy=policy,
+                                 recorder=recorder)
     trace = synth_arrival_trace(
         scenario.n_requests, packed.n_in, mode=scenario.arrivals,
         rate=scenario.rate, slack=scenario.slack, t_lo=scenario.t_lo,
@@ -307,7 +314,8 @@ def run_scenario(model, scenario: ChaosScenario, *, mesh=None,
         noise=noise, noise_key=scenario.seed,
         noise_probe_every=scenario.noise_probe_every, slo=scenario.slo,
         chaos_hook=(make_chaos_hook(scenario.lose_devices)
-                    if scenario.lose_devices else None))
+                    if scenario.lose_devices else None),
+        tracer=recorder)
     results, rids = serve_trace(server, trace)
     snap = server.metrics.snapshot()
     snap.update({
@@ -334,7 +342,7 @@ def swap_model_for(packed, scenario: ChaosScenario):
 
 
 def _run_multi_tenant(packed, scenario: ChaosScenario, *, mesh,
-                      policy: BucketPolicy | None):
+                      policy: BucketPolicy | None, recorder=None):
     """The multi-tenant leg of :func:`run_scenario`: every tenant serves
     the scenario model as its own registry entry (per-tenant covering
     bucket policy), the merged per-tenant traces replay on one fabric, and
@@ -366,7 +374,8 @@ def _run_multi_tenant(packed, scenario: ChaosScenario, *, mesh,
         service_model=lambda b, t: scenario.service_s,
         noise_probe_every=scenario.noise_probe_every, slo=scenario.slo,
         chaos_hook=(make_chaos_hook(scenario.lose_devices)
-                    if scenario.lose_devices else None))
+                    if scenario.lose_devices else None),
+        tracer=recorder)
     results, rids = serve_trace(server, tagged, control=control)
     snap = server.metrics.snapshot()
     snap.update({

@@ -39,8 +39,14 @@ Kinds:
   * ``ADMIN`` (v2) — ``req_id u32`` + a utf-8 JSON object: the control
     plane.  ``{"op": "swap", "model": ..., ...}`` hot-swaps a tenant
     through the server's model factory; ``{"op": "list"}`` enumerates
-    tenants.  The server answers with an ADMIN frame echoing ``req_id``
-    and a JSON reply (``{"ok": true/false, ...}``).
+    tenants; ``{"op": "metrics"}`` returns the full schema-locked
+    ``ServerMetrics.snapshot()`` (``METRIC_KEYS``); ``{"op": "trace"}``
+    exports the flight recorder — ``{"op": "trace", "rid": N}`` one
+    request's span trace by server rid, ``{"op": "trace", "last": true}``
+    the most recently completed trace, bare ``{"op": "trace"}`` the full
+    recorder ``dump()`` (see ``docs/OBSERVABILITY.md``).  The server
+    answers with an ADMIN frame echoing ``req_id`` and a JSON reply
+    (``{"ok": true/false, ...}``).
 
 ``req_id`` is client-chosen correlation state (the server echoes it back);
 it is unrelated to the server's internal rids.  :class:`FrameDecoder` is an

@@ -222,16 +222,23 @@ def _slice_request(res: "br.BatchedRunResult", row: int, t: int,
 
 # The per-engine-call telemetry record schema, shared by ``run_bucketed``
 # and the async ``StreamServer`` (schema-locked in tests/test_serving.py so
-# dashboards reading BENCH_serving.json don't silently break).
-TELEMETRY_KEYS = ("b_pad", "t_pad", "n_requests", "events", "out_spikes",
-                  "seconds")
+# dashboards reading BENCH_serving.json don't silently break).  ``seq`` is
+# a monotonic per-producer dispatch ordinal and ``ts`` the producer's clock
+# at dispatch (the StreamServer passes its pluggable clock's now, so
+# VirtualClock replays stamp deterministic timestamps; ``seconds`` stays
+# wall-measured engine time) — records shared through one ``telemetry=``
+# list across rounds are now self-ordering.
+TELEMETRY_KEYS = ("seq", "ts", "b_pad", "t_pad", "n_requests", "events",
+                  "out_spikes", "seconds")
 
 
 def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
                  mesh=None, max_events: int | None = None,
                  sn_capacity_rows: int | None = None,
                  with_stats: bool = True,
-                 donate: bool | None = None
+                 donate: bool | None = None,
+                 seq: int = 0, ts: float | None = None,
+                 now=None, span_log: list | None = None
                  ) -> tuple[list[RequestResult], dict]:
     """One engine call: zero-pad ``plan``'s requests into the plan's
     ``(b_pad, t_pad)`` bucket, run (sharded when ``mesh`` is given), and
@@ -245,11 +252,25 @@ def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
     ``donate`` recycles the padded upload buffer into the engine call
     (default: on unless the backend is CPU) — back-to-back dispatches of
     the same bucket then reuse one allocation instead of piling up copies.
+
+    ``seq``/``ts`` stamp the telemetry record (see ``TELEMETRY_KEYS``).
+    ``span_log``, if a list, receives ``(kind, t0, t1, attrs)`` tuples for
+    the ``pad`` and ``slice`` stages measured on ``now`` (the caller's
+    clock; defaults to ``time.monotonic``) — the tracer hook the
+    StreamServer unions into each request's :class:`RequestTrace`.  Under a
+    VirtualClock these are zero-width point events, so traces stay
+    replay-deterministic.
     """
+    clock = time.monotonic if now is None else now
+    if span_log is not None:
+        t_pad0 = clock()
     padded = np.zeros((plan.b_pad, plan.t_pad, packed.n_in),
                       dtype=np.float32)
     for row, i in enumerate(plan.indices):
         padded[row, :streams[i].shape[0]] = streams[i]
+    if span_log is not None:
+        span_log.append(("pad", t_pad0, clock(),
+                         {"b_pad": plan.b_pad, "t_pad": plan.t_pad}))
     t0 = time.perf_counter()
     if mesh is None:
         res = br.run_batched(packed, padded, max_events=max_events,
@@ -261,6 +282,8 @@ def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
                           with_stats=with_stats, donate=donate)
     dt = time.perf_counter() - t0
     record = {
+        "seq": int(seq),
+        "ts": float(time.monotonic() if ts is None else ts),
         "b_pad": plan.b_pad, "t_pad": plan.t_pad,
         "n_requests": len(plan.indices),
         "events": int(sum((streams[i] > 0).sum() for i in plan.indices)),
@@ -268,8 +291,13 @@ def execute_plan(packed: "br.PackedModel", streams, plan: BatchPlan, *,
             res.out_spikes[row, :streams[i].shape[0]].sum()
             for row, i in enumerate(plan.indices))),
         "seconds": dt}
+    if span_log is not None:
+        t_sl0 = clock()
     results = [_slice_request(res, row, streams[i].shape[0], with_stats)
                for row, i in enumerate(plan.indices)]
+    if span_log is not None:
+        span_log.append(("slice", t_sl0, clock(),
+                         {"n_requests": len(plan.indices)}))
     return results, record
 
 
@@ -332,11 +360,12 @@ def run_bucketed(model, streams, *, policy: BucketPolicy | None = None,
                      "bucket grid to time_steps=%s (new jit traces)",
                      len(over), policy.time_steps)
     results: list[RequestResult | None] = [None] * len(streams)
-    for plan in plan_batches(lengths, policy):
+    for seq, plan in enumerate(plan_batches(lengths, policy)):
         reqs, record = execute_plan(packed, streams, plan, mesh=mesh,
                                     max_events=max_events,
                                     sn_capacity_rows=sn_capacity_rows,
-                                    with_stats=with_stats, donate=donate)
+                                    with_stats=with_stats, donate=donate,
+                                    seq=seq)
         if telemetry is not None:
             telemetry.append(record)
         for row, i in enumerate(plan.indices):

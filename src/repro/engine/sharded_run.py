@@ -111,7 +111,7 @@ def _sharded_forward(mesh: Mesh, spec: PartitionSpec, donate: bool):
     bit-exactness hold by construction rather than by luck."""
 
     def fwd(packed, spikes, max_events):
-        br._bump_trace()
+        br._bump_trace("sharded", donated=donate)
         body = functools.partial(br._forward_impl, max_events=max_events)
         mapped = shard_map(body, mesh=mesh,
                            in_specs=(PartitionSpec(), spec),

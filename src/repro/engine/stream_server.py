@@ -82,6 +82,7 @@ from repro.engine.registry import (DEFAULT_MODEL, ModelEntry, ModelRegistry,
 from repro.engine.serving import (BatchPlan, BucketPolicy, RequestResult,
                                   execute_plan)
 from repro.engine.sharded_run import DeviceLossError, shrink_mesh
+from repro.engine.tracing import TIME_EDGES, FlightRecorder, Histogram
 
 _log = logging.getLogger(__name__)
 
@@ -156,9 +157,10 @@ METRIC_KEYS = (
     "deadline_misses", "deadline_miss_rate", "dispatches",
     "forced_dispatches", "policy_extensions", "queue_depth",
     "max_queue_depth", "bucket_fill_ratio", "p50_ttfd_s", "p99_ttfd_s",
-    "p50_latency_s", "p99_latency_s", "device_losses", "slo_switches",
-    "slo_shedding", "noise_probes", "noise_agreement", "models",
-    "hot_swaps", "per_model")
+    "p50_latency_s", "p99_latency_s", "recent_p50_ttfd_s",
+    "recent_p99_ttfd_s", "recent_p50_latency_s", "recent_p99_latency_s",
+    "device_losses", "slo_switches", "slo_shedding", "noise_probes",
+    "noise_agreement", "models", "hot_swaps", "per_model")
 
 # The per-tenant sub-table under snapshot()["per_model"], locked by
 # tests/test_serving.py and the docs/SERVING.md per-model table
@@ -166,7 +168,8 @@ METRIC_KEYS = (
 PER_MODEL_KEYS = (
     "submitted", "admitted", "rejected", "shed", "completed",
     "deadline_misses", "deadline_miss_rate", "dispatches", "hot_swaps",
-    "p50_latency_s", "p99_latency_s")
+    "p50_latency_s", "p99_latency_s", "recent_p50_latency_s",
+    "recent_p99_latency_s")
 
 
 def _pct(xs, q: float) -> float:
@@ -175,7 +178,10 @@ def _pct(xs, q: float) -> float:
 
 @dataclasses.dataclass
 class ModelMetrics:
-    """Per-tenant slice of the serving counters (``PER_MODEL_KEYS``)."""
+    """Per-tenant slice of the serving counters (``PER_MODEL_KEYS``).
+    ``p50/p99_latency_s`` come from a lifetime cumulative histogram (exact
+    over every completed request); the windowed deque percentiles survive
+    as ``recent_*``."""
 
     submitted: int = 0
     admitted: int = 0
@@ -187,6 +193,12 @@ class ModelMetrics:
     hot_swaps: int = 0
     latency_s: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=METRICS_WINDOW))
+    latency_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(TIME_EDGES))
+
+    def observe_latency(self, dt: float) -> None:
+        self.latency_s.append(dt)
+        self.latency_hist.add(dt)
 
     def snapshot(self) -> dict:
         return {
@@ -200,8 +212,10 @@ class ModelMetrics:
                                    if self.completed else 0.0),
             "dispatches": self.dispatches,
             "hot_swaps": self.hot_swaps,
-            "p50_latency_s": _pct(self.latency_s, 50),
-            "p99_latency_s": _pct(self.latency_s, 99),
+            "p50_latency_s": self.latency_hist.percentile(50),
+            "p99_latency_s": self.latency_hist.percentile(99),
+            "recent_p50_latency_s": _pct(self.latency_s, 50),
+            "recent_p99_latency_s": _pct(self.latency_s, 99),
         }
 
 
@@ -215,8 +229,11 @@ class ServerMetrics:
     bucket fill ratio (requests per dispatch / padded batch rows — how much
     of each engine call was real work), and the ``per_model`` sub-table
     keyed by tenant name (each row is ``PER_MODEL_KEYS``).  Counters are
-    lifetime-exact; percentiles/fill are over the last ``METRICS_WINDOW``
-    samples."""
+    lifetime-exact.  ``p50/p99_*`` percentiles come from lifetime
+    cumulative :class:`~repro.engine.tracing.Histogram` s — a week-long
+    soak's p99 reflects every request, not just the last
+    ``METRICS_WINDOW``; the windowed sliding values are exported under
+    explicit ``recent_*`` keys (and fill stays a windowed mean)."""
 
     submitted: int = 0
     admitted: int = 0
@@ -242,6 +259,10 @@ class ServerMetrics:
         default_factory=lambda: collections.deque(maxlen=METRICS_WINDOW))
     fill: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=METRICS_WINDOW))
+    ttfd_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(TIME_EDGES))
+    latency_hist: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram(TIME_EDGES))
 
     def model(self, name: str) -> ModelMetrics:
         """The (auto-created) per-tenant counter row for ``name``."""
@@ -249,6 +270,14 @@ class ServerMetrics:
         if mm is None:
             mm = self.per_model[name] = ModelMetrics()
         return mm
+
+    def observe_ttfd(self, dt: float) -> None:
+        self.ttfd_s.append(dt)
+        self.ttfd_hist.add(dt)
+
+    def observe_latency(self, dt: float) -> None:
+        self.latency_s.append(dt)
+        self.latency_hist.add(dt)
 
     def snapshot(self) -> dict:
         return {
@@ -267,10 +296,14 @@ class ServerMetrics:
             "max_queue_depth": self.max_queue_depth,
             "bucket_fill_ratio": (float(np.mean(self.fill))
                                   if self.fill else 0.0),
-            "p50_ttfd_s": _pct(self.ttfd_s, 50),
-            "p99_ttfd_s": _pct(self.ttfd_s, 99),
-            "p50_latency_s": _pct(self.latency_s, 50),
-            "p99_latency_s": _pct(self.latency_s, 99),
+            "p50_ttfd_s": self.ttfd_hist.percentile(50),
+            "p99_ttfd_s": self.ttfd_hist.percentile(99),
+            "p50_latency_s": self.latency_hist.percentile(50),
+            "p99_latency_s": self.latency_hist.percentile(99),
+            "recent_p50_ttfd_s": _pct(self.ttfd_s, 50),
+            "recent_p99_ttfd_s": _pct(self.ttfd_s, 99),
+            "recent_p50_latency_s": _pct(self.latency_s, 50),
+            "recent_p99_latency_s": _pct(self.latency_s, 99),
             "device_losses": self.device_losses,
             "slo_switches": self.slo_switches,
             "slo_shedding": int(self.slo_shedding),
@@ -350,7 +383,8 @@ class StreamServer:
                  donate: bool | None = None,
                  noise=None, noise_key=0, noise_probe_every: int = 8,
                  slo: SLOPolicy | None = None,
-                 chaos_hook=None, on_rejection=None, on_completion=None):
+                 chaos_hook=None, on_rejection=None, on_completion=None,
+                 tracer: FlightRecorder | None = None):
         assert backpressure in ("reject", "shed_oldest"), backpressure
         assert overlong in ("reject", "extend"), overlong
         assert queue_capacity > 0
@@ -415,6 +449,14 @@ class StreamServer:
         # period — observers (benchmarks, transports) read per-request
         # completion instants off self.now() without polling collect().
         self.on_completion = on_completion
+        # tracer: a FlightRecorder (repro.engine.tracing) receiving a typed
+        # span trace for every admitted request plus typed anomalies for
+        # every fault.  All span times come off self.clock, so a
+        # VirtualClock replay produces byte-identical dumps; None = tracing
+        # off, with zero observable effect on served bits (tested).
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.attach_jit_probe()
         self.metrics = ServerMetrics()
         # execute_plan records / rejection log, last METRICS_WINDOW entries
         self.telemetry: collections.deque = \
@@ -512,6 +554,11 @@ class StreamServer:
         self.clear_service_estimates(name)
         self.metrics.hot_swaps += 1
         self.metrics.model(name).hot_swaps += 1
+        if self.tracer is not None:
+            # generation pin: in-flight work drained on the old weights
+            self.tracer.anomaly("hot_swap_pin", t=self.now(), model=name,
+                                generation=entry.generation,
+                                drained=len(drained))
         _log.info("stream_server: hot-swapped model %r to generation %d "
                   "(drained on old weights; new submits redirected)",
                   name, entry.generation)
@@ -550,6 +597,14 @@ class StreamServer:
             self.metrics.rejected += 1
             if mm is not None:
                 mm.rejected += 1
+        if self.tracer is not None:
+            kind = "shed" if reason == "shed" else "reject"
+            self.tracer.anomaly(kind, t=rej.at, rid=rid, reason=reason,
+                                detail=detail, model=model)
+            if rid is not None:
+                # the admitted trace will never complete — park it in the
+                # recorder's anomalous ring
+                self.tracer.abort(rid, t=rej.at)
         if self.on_rejection is not None:
             self.on_rejection(rej)
 
@@ -632,6 +687,9 @@ class StreamServer:
             policy = policy.with_time_bucket(t_len)
             self._policies[name] = policy
             self.metrics.policy_extensions += 1
+            if self.tracer is not None:
+                self.tracer.anomaly("policy_extension", t=now, model=name,
+                                    time_steps=list(policy.time_steps))
             _log.warning("stream_server: %d-step request extended model "
                          "%r's bucket grid to time_steps=%s (new jit trace)",
                          t_len, name, policy.time_steps)
@@ -658,6 +716,14 @@ class StreamServer:
         self.metrics.queue_depth = self._n_pending
         self.metrics.max_queue_depth = max(self.metrics.max_queue_depth,
                                            self._n_pending)
+        if self.tracer is not None:
+            self.tracer.start(rid, model=name, generation=entry.generation,
+                              t=arrival_t)
+            attrs = {"t_steps": int(t_len), "t_pad": int(req.t_pad),
+                     "queue_depth": self._n_pending}
+            if deadline != math.inf:
+                attrs["deadline"] = float(deadline)
+            self.tracer.span(rid, "admit", arrival_t, now, **attrs)
         if len(self._pending[key]) >= policy.max_batch:
             self._dispatch(key, policy.max_batch, forced=False)
         return rid
@@ -765,32 +831,46 @@ class StreamServer:
                 time_steps=p.time_steps)
             self.clear_service_estimates(name)
         self.metrics.device_losses += 1
+        if self.tracer is not None:
+            self.tracer.anomaly("device_loss", t=self.now(),
+                                n_lost=err.n_lost, mesh_from=old,
+                                mesh_to=self.mesh.size)
         _log.warning("stream_server: lost %d device(s) mid-serving; "
                      "recovered %d -> %d-way mesh, default batch buckets "
                      "now %s (new jit traces)", err.n_lost, old,
                      self.mesh.size, self.policy.batch_sizes)
 
-    def _execute(self, packed, streams: list, plan: BatchPlan):
+    def _execute(self, packed, streams: list, plan: BatchPlan, *,
+                 seq: int = 0, ts: float | None = None,
+                 span_log: list | None = None):
         return execute_plan(
             packed, streams, plan,
             mesh=self.mesh, max_events=self.max_events,
             sn_capacity_rows=self.sn_capacity_rows,
-            with_stats=self.with_stats, donate=self.donate)
+            with_stats=self.with_stats, donate=self.donate,
+            seq=seq, ts=ts, now=self.now, span_log=span_log)
 
-    def _noise_probe(self, entry: ModelEntry, results, streams,
+    def _noise_probe(self, entry: ModelEntry, reqs, results, streams,
                      plan: BatchPlan) -> None:
         """Shadow-replay this dispatch through the tenant's clean
         (un-perturbed) model and count per-request prediction flips — the
         serving-time accuracy-under-noise signal.  Runs off the metrics
         clock (a measurement, not service work): no telemetry record, no
-        EWMA update, no virtual-clock advance."""
+        EWMA update, no virtual-clock advance.  Each flip is recorded as a
+        ``noise_disagreement`` anomaly on the (already completed) trace."""
         clean, _ = self._execute(entry.clean, streams, plan)
         m = self.metrics
-        for res, ref in zip(results, clean):
+        for req, res, ref in zip(reqs, results, clean):
             noisy_pred = int(res.out_spikes.sum(axis=0).argmax())
             clean_pred = int(ref.out_spikes.sum(axis=0).argmax())
             m.noise_probes += 1
-            m.noise_disagreements += int(noisy_pred != clean_pred)
+            flipped = noisy_pred != clean_pred
+            m.noise_disagreements += int(flipped)
+            if flipped and self.tracer is not None:
+                self.tracer.anomaly("noise_disagreement", t=self.now(),
+                                    rid=req.rid, model=entry.name,
+                                    noisy_pred=noisy_pred,
+                                    clean_pred=clean_pred)
 
     def _slo_update(self) -> None:
         """Flip between extend-biased and shed mode on the windowed
@@ -825,6 +905,7 @@ class StreamServer:
         self._n_pending_by[name] -= k
         streams = [r.stream for r in reqs]
         dispatch_t = self.now()
+        tr = self.tracer
         # device loss surfaces at the dispatch boundary (from the chaos
         # hook here; from the runtime's watchdog in production); recovery
         # shrinks the mesh and retries the same requests — requests are
@@ -833,10 +914,14 @@ class StreamServer:
             b_pad = self._policy_for(name).b_bucket(k)
             plan = BatchPlan(indices=tuple(range(k)), b_pad=b_pad,
                              t_pad=t_pad)
+            span_log = [] if tr is not None else None
             try:
                 if self.chaos_hook is not None:
                     self.chaos_hook(self.metrics.dispatches)
-                results, record = self._execute(entry.packed, streams, plan)
+                results, record = self._execute(
+                    entry.packed, streams, plan,
+                    seq=self.metrics.dispatches, ts=dispatch_t,
+                    span_log=span_log)
                 break
             except DeviceLossError as e:
                 self._recover_mesh(e)
@@ -863,22 +948,85 @@ class StreamServer:
         m.forced_dispatches += int(forced)
         m.fill.append(k / b_pad)
         m.queue_depth = self._n_pending
+        if tr is not None:
+            # dispatch-level attrs shared by every member trace: the
+            # deterministic slice of the telemetry record (``seconds`` is
+            # wall-measured and would break byte-identical replays), the
+            # scheduler's *why* (deadline-forced vs full bucket), and the
+            # per-layer hardware roll-up sampled from the engine results.
+            det = {kk: record[kk] for kk in
+                   ("seq", "b_pad", "t_pad", "n_requests", "events",
+                    "out_spikes")}
+            det.update(model=name, generation=gen)
+            why = "deadline" if forced else "full_bucket"
+            grp_deadline = min(r.deadline for r in reqs)
+            hw_layers: list[dict] = []
+            if results and results[0].stats:
+                for li in range(len(results[0].stats)):
+                    hw_layers.append({
+                        "layer": li,
+                        "events": sum(int(r.stats[li].events.sum())
+                                      for r in results),
+                        "engine_ops": sum(int(r.stats[li].engine_ops.sum())
+                                          for r in results),
+                        "cycles": sum(int(r.stats[li].cycles.sum())
+                                      for r in results),
+                        "rows_touched": sum(
+                            int(r.stats[li].rows_touched.sum())
+                            for r in results),
+                        "util_mean": float(np.mean(
+                            [float(np.mean(r.util[li])) for r in results])),
+                    })
+                if results[0].spec is not None:
+                    ereps = [r.energy() for r in results]
+                    det["energy_j"] = float(sum(
+                        er.dynamic_j + er.static_j for er in ereps))
+                    det["tops_per_w"] = float(np.mean(
+                        [er.tops_per_w for er in ereps]))
+            tr.observe("service_s", end_t - dispatch_t)
+            tr.observe("fill", k / b_pad)
         for req, res in zip(reqs, results):
             self._completed.append((req.rid, res))
             if self.on_completion is not None:
                 self.on_completion(req.rid, res)
             m.completed += 1
             mm.completed += 1
-            m.ttfd_s.append(dispatch_t - req.arrival_t)
-            m.latency_s.append(end_t - req.arrival_t)
-            mm.latency_s.append(end_t - req.arrival_t)
+            m.observe_ttfd(dispatch_t - req.arrival_t)
+            m.observe_latency(end_t - req.arrival_t)
+            mm.observe_latency(end_t - req.arrival_t)
             missed = end_t > req.deadline
             m.deadline_misses += int(missed)
             mm.deadline_misses += int(missed)
             self._slo_misses.append(missed)
+            if tr is not None:
+                tr.span(req.rid, "queue", req.arrival_t, dispatch_t)
+                sched = {"why": why, "n_requests": k}
+                if grp_deadline != math.inf:
+                    sched["group_deadline"] = float(grp_deadline)
+                tr.span(req.rid, "schedule", dispatch_t, dispatch_t, **sched)
+                # lifecycle order: pad -> dispatch -> slice (the pad/slice
+                # micro-spans come off execute_plan's span_log)
+                for kind, s0, s1, attrs in span_log:
+                    if kind == "pad":
+                        tr.span(req.rid, kind, s0, s1, **attrs)
+                tr.span(req.rid, "dispatch", dispatch_t, end_t, **det)
+                for kind, s0, s1, attrs in span_log:
+                    if kind != "pad":
+                        tr.span(req.rid, kind, s0, s1, **attrs)
+                for hw in hw_layers:
+                    tr.span(req.rid, "hw", dispatch_t, end_t, **hw)
+                tr.span(req.rid, "complete", end_t, end_t,
+                        latency_s=end_t - req.arrival_t, missed=missed)
+                if missed:
+                    tr.anomaly("deadline_miss", t=end_t, rid=req.rid,
+                               deadline=float(req.deadline),
+                               late_s=end_t - req.deadline, model=name)
+                tr.observe("ttfd_s", dispatch_t - req.arrival_t)
+                tr.observe("latency_s", end_t - req.arrival_t)
+                tr.complete(req.rid, end_t)
         if (entry.noise is not None and self.noise_probe_every
                 and mm.dispatches % self.noise_probe_every == 0):
-            self._noise_probe(entry, results, streams, plan)
+            self._noise_probe(entry, reqs, results, streams, plan)
         if not q:
             # GC: a drained group of a superseded generation releases its
             # pin on the old weights

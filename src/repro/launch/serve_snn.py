@@ -101,19 +101,22 @@ def serve_async(model, trace, *, policy: BucketPolicy, mesh,
                 queue_capacity: int = 256, backpressure: str = "reject",
                 service_model=None, max_events: int | None = None,
                 with_stats: bool = False, donate: bool | None = None,
-                noise=None, noise_key=0):
+                noise=None, noise_key=0, tracer=None):
     """One async serving pass over an arrival trace (virtual clock);
     returns ``(results, rids, metrics)``.  ``metrics`` is the
     ``ServerMetrics`` snapshot plus the trajectory numbers
     ``BENCH_async_serving.json`` records: offered load, simulated-time
-    throughput, wall seconds, and the jit-trace delta."""
+    throughput, wall seconds, and the jit-trace delta.  ``tracer`` (a
+    :class:`~repro.engine.tracing.FlightRecorder`) enables per-request span
+    tracing — the overhead benchmark's on/off comparison surface."""
     server = StreamServer(model, policy=policy, mesh=mesh,
                           clock=VirtualClock(),
                           queue_capacity=queue_capacity,
                           backpressure=backpressure,
                           service_model=service_model,
                           max_events=max_events, with_stats=with_stats,
-                          donate=donate, noise=noise, noise_key=noise_key)
+                          donate=donate, noise=noise, noise_key=noise_key,
+                          tracer=tracer)
     n0 = trace_count()
     t0 = time.perf_counter()
     results, rids = serve_trace(server, trace)

@@ -27,7 +27,11 @@ v1 frames (older edge sensors) route to the default model.  ADMIN frames
 are the control plane — ``{"op": "swap", "model": ..., ...}`` hot-swaps a
 tenant live through the configured ``model_factory`` (in-flight requests
 drain on the old weights, zero drops), ``{"op": "list"}`` enumerates
-tenants and their generations.
+tenants and their generations, ``{"op": "metrics"}`` returns the
+schema-locked ``ServerMetrics.snapshot()``, and ``{"op": "trace"}``
+exports per-request span traces / the flight-recorder dump (the server
+runs a :class:`~repro.engine.tracing.FlightRecorder` by default; see
+``docs/OBSERVABILITY.md``).
 """
 
 from __future__ import annotations
@@ -53,6 +57,7 @@ from repro.engine.registry import (ModelRegistry,  # noqa: E402
                                    UnknownModelError)
 from repro.engine.serving import BucketPolicy  # noqa: E402
 from repro.engine.stream_server import SLOPolicy, StreamServer  # noqa: E402
+from repro.engine.tracing import FlightRecorder  # noqa: E402
 
 _log = logging.getLogger(__name__)
 
@@ -84,14 +89,22 @@ class SpikeSocketServer:
     ``policy`` unset).  ``model_factory(spec: dict) -> PackedModel`` turns
     an ADMIN swap request's JSON body into new weights; without one, swap
     requests are refused (the data plane is unaffected).
+
+    A live socket server always runs a flight recorder (``tracer``; pass
+    your own :class:`~repro.engine.tracing.FlightRecorder` to size the
+    rings) — the ADMIN ``metrics`` / ``trace`` verbs are the wire
+    export of ``ServerMetrics.snapshot()`` and the recorder.
     """
 
     def __init__(self, model, *, policy: BucketPolicy | None = None,
                  host: str = "127.0.0.1", port: int = 0,
                  max_request_steps: int = 4096, model_factory=None,
+                 tracer: FlightRecorder | None = None,
                  **server_kwargs):
+        self.tracer = tracer if tracer is not None else FlightRecorder()
         self.server = StreamServer(model, policy=policy,
                                    on_rejection=self._on_rejection,
+                                   tracer=self.tracer,
                                    **server_kwargs)
         self.model_factory = model_factory
         # untrusted-input bound: a protocol-valid REQUEST header may claim
@@ -209,14 +222,38 @@ class SpikeSocketServer:
         conn.inflight += 1
 
     def _on_admin(self, conn: _Conn, frame: ingest.Frame) -> None:
-        """Control plane: hot-swap a tenant / list tenants.  Every admin
-        request gets an ADMIN reply echoing its req_id; failures answer
-        ``{"ok": false, "error": ...}`` instead of touching the data
-        plane."""
+        """Control plane: hot-swap a tenant / list tenants / export metrics
+        and traces.  Every admin request gets an ADMIN reply echoing its
+        req_id; failures answer ``{"ok": false, "error": ...}`` instead of
+        touching the data plane."""
         req_id, body = ingest.decode_admin(frame.payload)
         op = body.get("op")
         try:
-            if op == "list":
+            if op == "metrics":
+                # the full schema-locked snapshot (METRIC_KEYS, with the
+                # PER_MODEL_KEYS sub-table) — note json sorts keys on the
+                # wire, so consumers key by name, not position
+                reply = {"ok": True,
+                         "metrics": self.server.metrics.snapshot()}
+            elif op == "trace":
+                tr = self.server.tracer
+                if tr is None:
+                    raise RuntimeError("tracing is disabled on this server")
+                if body.get("rid") is not None:
+                    t = tr.trace(int(body["rid"]))
+                    if t is None:
+                        raise KeyError(
+                            f"no trace for rid {body['rid']} (completed "
+                            f"ring keeps the last {tr.completed.maxlen})")
+                    reply = {"ok": True, "trace": t.to_dict()}
+                elif body.get("last"):
+                    t = tr.last()
+                    if t is None:
+                        raise KeyError("no completed traces yet")
+                    reply = {"ok": True, "trace": t.to_dict()}
+                else:
+                    reply = {"ok": True, "dump": tr.dump()}
+            elif op == "list":
                 reply = {"ok": True,
                          "default": self.server.registry.default,
                          "models": {n: self.server.registry.get(n).generation
@@ -535,6 +572,10 @@ def main():
                              "kind": swap_kind, "seed": 1})
             for s in post_swap:
                 cli.send(s, model=swap_tenant)
+            # observability round-trip while the loop is live: the full
+            # metrics snapshot and a flight-recorder dump over the wire
+            met = cli.admin({"op": "metrics"})
+            trc = cli.admin({"op": "trace"})
             cli.recv_all()
             cli.close()
         snap = srv.server.metrics.snapshot()
@@ -543,6 +584,15 @@ def main():
         reply = cli.admin_replies[adm]
         assert reply.get("ok") and reply.get("generation") == 2, reply
         assert snap["hot_swaps"] == 1 and snap["rejected"] == 0, snap
+        from repro.engine.stream_server import METRIC_KEYS
+        mrep = cli.admin_replies[met]
+        assert mrep.get("ok") and set(mrep["metrics"]) == set(METRIC_KEYS), \
+            f"ADMIN metrics reply is not schema-locked: {sorted(mrep)}"
+        trep = cli.admin_replies[trc]
+        assert trep.get("ok") and "anomaly_counts" in trep["dump"], trep
+        # every fault this smoke injected is a typed recorder anomaly
+        counts = srv.tracer.anomaly_counts
+        assert counts.get("hot_swap_pin", 0) == 1, counts
         per_done = ", ".join(
             f"{n}={mm['completed']}" for n, mm in snap["per_model"].items())
         print(f"socket-serve smoke: {snap['completed']} served across "

@@ -12,11 +12,13 @@ import re
 import subprocess
 import sys
 
-from repro.engine import (METRIC_KEYS, PER_MODEL_KEYS, SCENARIOS,
+from repro.engine import (ANOMALY_KINDS, HIST_KEYS, METRIC_KEYS,
+                          PER_MODEL_KEYS, SCENARIOS, SPAN_KINDS,
                           TELEMETRY_KEYS)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SERVING_MD = os.path.join(REPO, "docs", "SERVING.md")
+OBSERVABILITY_MD = os.path.join(REPO, "docs", "OBSERVABILITY.md")
 
 
 def _table_keys(text: str, section: str) -> tuple[str, ...]:
@@ -70,6 +72,36 @@ def test_scenario_table_matches_registry():
         f"docs/SERVING.md scenario table is out of sync with "
         f"chaos.SCENARIOS\n  documented: {doc}\n"
         f"  code:       {tuple(SCENARIOS)}")
+
+
+def _observability_md() -> str:
+    with open(OBSERVABILITY_MD, encoding="utf-8") as f:
+        return f.read()
+
+
+def test_span_table_matches_code():
+    """docs/OBSERVABILITY.md documents every span kind, in lifecycle
+    order — the trace-consumer half of test_tracing.py's schema lock."""
+    doc = _table_keys(_observability_md(), "## Span taxonomy")
+    assert doc == SPAN_KINDS, (
+        f"docs/OBSERVABILITY.md span table is out of sync with "
+        f"SPAN_KINDS\n  documented: {doc}\n  code:       {SPAN_KINDS}")
+
+
+def test_anomaly_table_matches_code():
+    doc = _table_keys(_observability_md(),
+                      "## Anomalies and the flight recorder")
+    assert doc == ANOMALY_KINDS, (
+        f"docs/OBSERVABILITY.md anomaly table is out of sync with "
+        f"ANOMALY_KINDS\n  documented: {doc}\n  code:       "
+        f"{ANOMALY_KINDS}")
+
+
+def test_histogram_table_matches_code():
+    doc = _table_keys(_observability_md(), "## Histograms")
+    assert doc == HIST_KEYS, (
+        f"docs/OBSERVABILITY.md histogram table is out of sync with "
+        f"HIST_KEYS\n  documented: {doc}\n  code:       {HIST_KEYS}")
 
 
 def test_markdown_links_resolve():

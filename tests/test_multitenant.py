@@ -347,7 +347,8 @@ def test_per_model_metrics_schema_locked():
     assert PER_MODEL_KEYS == (
         "submitted", "admitted", "rejected", "shed", "completed",
         "deadline_misses", "deadline_miss_rate", "dispatches", "hot_swaps",
-        "p50_latency_s", "p99_latency_s")
+        "p50_latency_s", "p99_latency_s", "recent_p50_latency_s",
+        "recent_p99_latency_s")
     m = ServerMetrics()
     snap = m.model("x").snapshot()
     assert tuple(snap.keys()) == PER_MODEL_KEYS

@@ -209,40 +209,49 @@ def test_bucketed_telemetry(rng):
 def test_telemetry_schema_locked(rng):
     """The per-engine-call telemetry record keys are a dashboard contract
     (BENCH_serving.json): adding/renaming fields must update TELEMETRY_KEYS
-    and this test together."""
-    assert TELEMETRY_KEYS == ("b_pad", "t_pad", "n_requests", "events",
-                              "out_spikes", "seconds")
+    and this test together.  ``seq``/``ts`` make records shared through one
+    ``telemetry=`` list self-ordering across dispatch rounds."""
+    assert TELEMETRY_KEYS == ("seq", "ts", "b_pad", "t_pad", "n_requests",
+                              "events", "out_spikes", "seconds")
     model = _dense_model(rng)
     telemetry = []
     run_bucketed(model, _streams(rng, 14, [4, 9]), telemetry=telemetry,
                  policy=BucketPolicy(batch_sizes=(2,), time_steps=(4, 16)))
     for t in telemetry:
         assert tuple(t.keys()) == TELEMETRY_KEYS
-    # the async server emits the same records
+    # per-call monotonic ordinals
+    assert [t["seq"] for t in telemetry] == list(range(len(telemetry)))
+    # the async server emits the same records, stamped with its clock
     server = StreamServer(model, clock=VirtualClock(),
                           policy=BucketPolicy(batch_sizes=(2,),
                                               time_steps=(4, 16)))
     server.submit(_streams(rng, 14, [4])[0])
     server.flush()
-    assert tuple(server.telemetry[0].keys()) == TELEMETRY_KEYS
+    rec = server.telemetry[0]
+    assert tuple(rec.keys()) == TELEMETRY_KEYS
+    assert rec["seq"] == 0 and rec["ts"] == 0.0  # VirtualClock dispatch time
 
 
 def test_server_metrics_schema_locked():
     """ServerMetrics.snapshot() keys are the BENCH_async_serving.json
-    surface — locked so dashboards don't silently break."""
+    surface — locked so dashboards don't silently break.  ``p50/p99_*``
+    come from lifetime cumulative histograms; the windowed deque values
+    survive under the explicit ``recent_*`` keys."""
     assert METRIC_KEYS == (
         "submitted", "admitted", "rejected", "shed", "completed",
         "deadline_misses", "deadline_miss_rate", "dispatches",
         "forced_dispatches", "policy_extensions", "queue_depth",
         "max_queue_depth", "bucket_fill_ratio", "p50_ttfd_s", "p99_ttfd_s",
-        "p50_latency_s", "p99_latency_s", "device_losses", "slo_switches",
-        "slo_shedding", "noise_probes", "noise_agreement", "models",
-        "hot_swaps", "per_model")
+        "p50_latency_s", "p99_latency_s", "recent_p50_ttfd_s",
+        "recent_p99_ttfd_s", "recent_p50_latency_s", "recent_p99_latency_s",
+        "device_losses", "slo_switches", "slo_shedding", "noise_probes",
+        "noise_agreement", "models", "hot_swaps", "per_model")
     snap = ServerMetrics().snapshot()
     assert tuple(snap.keys()) == METRIC_KEYS
     assert snap["deadline_miss_rate"] == 0.0      # no div-by-zero when idle
     assert snap["noise_agreement"] == 1.0         # no probes = no evidence
     assert snap["per_model"] == {} and snap["models"] == 0
+    assert snap["p50_latency_s"] == 0.0 and snap["recent_p99_ttfd_s"] == 0.0
 
 
 # ------------------------------------------------- over-long requests
