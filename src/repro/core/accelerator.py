@@ -30,7 +30,7 @@ from repro.core.mapping import (MappingError, MappingProblem, MappingSolution,
 from repro.core.memories import (DispatchStats, MemTables, WeightCompression,
                                  build_event_memories, compress_weight_words,
                                  dispatch_simulate, mem_sn_utilization)
-from repro.core.quant import quantize_symmetric
+from repro.core.quant import check_bits, quantize_symmetric
 
 
 @dataclasses.dataclass
@@ -52,9 +52,12 @@ class MappedLayer:
     n_dest: int
     layer_spec: LayerSpec | None = None   # quantized Dense/Conv2d spec
     weight_bytes: int = 0      # unique stored bytes (kernel taps for conv)
-    sram_bytes: int = 0        # A-SYN words physically allocated: a tap
-                               # shared across engines/rounds is stored once
-                               # per engine per round that references it
+    sram_bytes: int = 0        # A-SYN bytes physically allocated: words
+                               # (a tap shared across engines/rounds is stored
+                               # once per engine per round that references it)
+                               # priced at the layer's actual word bit-width
+    bits: int = 8              # stored weight bit-width (sign-magnitude)
+    scale: float = 1.0         # per-tensor symmetric quantization scale
 
     @property
     def shared_weights(self) -> bool:
@@ -85,20 +88,29 @@ class MappedModel:
     weight_dict: np.ndarray | None = None
     compression: WeightCompression | None = None
 
-    def pack(self, block_d: int | None = None):
+    def pack(self, block_d: int | None = None,
+             packed_ops: bool | None = None):
         """Pack into the batched JAX engine's pytree representation (see
-        :mod:`repro.engine.batched_run`), memoized per block size — the
-        table replay and device transfer happen once, not per batch."""
+        :mod:`repro.engine.batched_run`), memoized per (block size, operand
+        layout) — the table replay and device transfer happen once, not per
+        batch.  ``packed_ops`` selects the sub-byte packed-operand kernel
+        path; ``None`` auto-enables it iff any layer is quantized below
+        8 bits (see :func:`repro.engine.batched_run.pack_model`)."""
         from repro.engine.batched_run import DEFAULT_BLOCK_D, pack_model
         block_d = DEFAULT_BLOCK_D if block_d is None else block_d
+        if packed_ops is None:
+            packed_ops = any(l.bits < 8 for l in self.layers)
         cache = self.__dict__.setdefault("_packed_cache", {})
-        if block_d not in cache:
-            cache[block_d] = pack_model(self, block_d=block_d)
-        return cache[block_d]
+        key = (block_d, bool(packed_ops))
+        if key not in cache:
+            cache[key] = pack_model(self, block_d=block_d,
+                                    packed_ops=packed_ops)
+        return cache[key]
 
 
 def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
-              lif: LIFParams = LIFParams(), quant_bits: int = 8,
+              lif: LIFParams = LIFParams(),
+              quant_bits: "int | list[int] | tuple[int, ...]" = 8,
               fanout: int | None = None,
               method: str = "auto", compress: bool = False) -> MappedModel:
     """Algorithm 1 steps 3-5: quantize, ILP-map, build config memories.
@@ -112,6 +124,13 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
     unrolled synapses.  Each layer must fit one MX-NEURACORE's weight SRAM;
     layers wider than M*N run in multiple capacitor-reassignment rounds.
 
+    ``quant_bits`` sets the stored weight bit-width: a single int for every
+    layer, or one per layer (mixed precision).  A layer spec's own ``bits``
+    field, when set, wins over both.  Words are sign-magnitude C2C ladder
+    codes (:data:`repro.core.quant.SUPPORTED_BITS`); SRAM accounting prices
+    them at their actual width, and sub-8-bit layers execute through the
+    packed-operand kernel path in the batched engine.
+
     ``compress=True`` turns on the two-level synapse compression
     (arXiv:2112.07019): per-engine *value* dedup inside
     :func:`build_event_memories` (identical quantized words on one engine
@@ -124,6 +143,14 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
     if len(weights) > spec.n_cores:
         raise MappingError(f"model has {len(weights)} layers but "
                            f"{spec.name} has {spec.n_cores} cores")
+    if isinstance(quant_bits, (list, tuple)):
+        if len(quant_bits) != len(weights):
+            raise ValueError(
+                f"quant_bits has {len(quant_bits)} entries for "
+                f"{len(weights)} layers")
+        default_bits = [check_bits(int(b)) for b in quant_bits]
+    else:
+        default_bits = [check_bits(int(quant_bits))] * len(weights)
     layers = []
     prev: LayerSpec | None = None
     for li, layer_in in enumerate(weights):
@@ -133,12 +160,16 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
                 f"layer {li} expects {ls.n_src} inputs but layer {li-1} "
                 f"produces {prev.n_dest}")
         prev = ls
+        # spec-pinned bit-width wins over the map_model default(s)
+        bits = check_bits(ls.bits) if ls.bits is not None else default_bits[li]
         # quantize the STORED tensor (kernel for conv, matrix for dense) so
         # synapses sharing an SRAM word carry identical dequantized values
         stored = np.asarray(ls.stored_weights)
-        qt = quantize_symmetric(stored, bits=quant_bits)
+        qt = quantize_symmetric(stored, bits=bits)
+        scale = float(np.asarray(qt.scale))
         ls_q = ls.with_stored(np.asarray(qt.dequantize()) * (stored != 0))
-        nz_bytes = ls_q.unique_weight_bytes   # 8-bit -> 1 byte per SRAM word
+        ls_q = dataclasses.replace(ls_q, bits=bits)
+        nz_bytes = ls_q.unique_weight_bytes   # words priced at `bits` wide
         # necessary condition, checked before the (expensive) ILP; the
         # sufficient physical-allocation check follows the rounds loop.
         # (Skipped under compression: value dedup can fit a layer whose
@@ -166,13 +197,14 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
             tables = build_event_memories(
                 w_sub, sol, spec.n_engines, spec.n_caps,
                 share_ids=None if share is None else share[:, remaining],
-                dedup=compress)
+                dedup=compress, word_bits=bits)
             rounds.append(MappedRound(neuron_ids=remaining.copy(),
                                       mapping=sol, tables=tables))
             remaining = remaining[sol.engine < 0]
         layers.append(MappedLayer(w_q=w_q, rounds=rounds,
                                   n_src=n_src, n_dest=n_dest,
-                                  layer_spec=ls_q, weight_bytes=nz_bytes))
+                                  layer_spec=ls_q, weight_bytes=nz_bytes,
+                                  bits=bits, scale=scale))
     weight_dict = None
     compression = None
     if compress:
@@ -180,13 +212,15 @@ def map_model(weights: "list[np.ndarray | LayerSpec]", spec: AcceleratorSpec,
             [r.tables for layer in layers for r in layer.rounds])
         weight_dict = layers[0].rounds[0].tables.weight_dict if layers else None
     for li, layer in enumerate(layers):
-        # the hardware-fit guarantee: words PHYSICALLY allocated.  A shared
-        # tap is stored once per engine per round that references it (each
-        # engine's A-SYN slice is private), so this exceeds weight_bytes for
-        # conv; for dense it is the assigned-synapse count.  Compressed:
-        # n_weight_words counts only words newly contributed to the shared
-        # dictionary, so the budget buys strictly bigger models.
-        layer.sram_bytes = sum(r.tables.n_weight_words for r in layer.rounds)
+        # the hardware-fit guarantee: words PHYSICALLY allocated, priced at
+        # the layer's word width.  A shared tap is stored once per engine per
+        # round that references it (each engine's A-SYN slice is private), so
+        # this exceeds weight_bytes for conv; for dense it is the
+        # assigned-synapse count.  Compressed: n_weight_words counts only
+        # words newly contributed to the shared dictionary, so the budget
+        # buys strictly bigger models.
+        n_words = sum(r.tables.n_weight_words for r in layer.rounds)
+        layer.sram_bytes = -(-n_words * layer.bits // 8)
         if layer.sram_bytes > spec.weight_mem_bytes:
             raise MappingError(
                 f"layer {li}: mapping stores {layer.sram_bytes} B across "
@@ -266,7 +300,8 @@ def run(model: MappedModel, in_spikes: np.ndarray,
         util_all.append(util)
         stats_all.append(agg_stats)
         spikes = out
-    energy = energy_model(model.spec, stats_all, frame_cycles=frame_cycles)
+    energy = energy_model(model.spec, stats_all, frame_cycles=frame_cycles,
+                          per_core_bits=[l.bits for l in model.layers])
     return RunResult(out_spikes=spikes, per_layer_stats=stats_all,
                      per_layer_util=util_all, energy=energy,
                      overflow=drop_all)

@@ -88,7 +88,8 @@ class EnergyReport:
 
 def energy_model(spec: AcceleratorSpec,
                  per_core_stats: list[DispatchStats],
-                 frame_cycles: int | None = FRAME_CYCLES) -> EnergyReport:
+                 frame_cycles: int | None = FRAME_CYCLES,
+                 per_core_bits: "list[int] | None" = None) -> EnergyReport:
     """Aggregate per-core dispatch statistics into Table-II-style numbers.
 
     per_core_stats: one DispatchStats per MX-NEURACORE (layer).  Cores run
@@ -100,8 +101,20 @@ def energy_model(spec: AcceleratorSpec,
     until the next frame.  This is what makes the sparse N-MNIST workload
     less efficient than the busy CIFAR10-DVS one on the *larger* Accel_2 —
     the paper's Table II contrast.  ``None`` = throughput mode (no idle).
+
+    ``per_core_bits`` gives each core's stored weight bit-width (one entry
+    per DispatchStats; ``None`` = all 8-bit).  Only the C2C-ladder MAC
+    energy scales with it: a ``bits``-wide sign-magnitude word switches
+    ``bits`` ladder capacitors + SRAM bitlines per MAC, so E_MAC scales
+    ~``bits/8`` while controller row dispatch (digital, word-width-blind)
+    and A-NEURON integration are unchanged.  This is the lever behind the
+    paper's sub-byte TOPS/W headline.
     """
     assert len(per_core_stats) <= spec.n_cores
+    if per_core_bits is not None and len(per_core_bits) != len(per_core_stats):
+        raise ValueError(
+            f"per_core_bits has {len(per_core_bits)} entries for "
+            f"{len(per_core_stats)} cores")
     total_macs = sum(int(s.engine_ops.sum()) for s in per_core_stats)
     total_rows = sum(int(s.rows_touched.sum()) for s in per_core_stats)
     total_ops = total_macs * OPS_PER_MAC
@@ -114,7 +127,12 @@ def energy_model(spec: AcceleratorSpec,
             for s in per_core_stats)
     wall_time = max(slowest_cycles, 1) / F_CLK_HZ
 
-    e_mac = total_macs * E_MAC_J
+    if per_core_bits is None or all(b == 8 for b in per_core_bits):
+        # uniform 8-bit: single product, bit-identical to the legacy model
+        e_mac = total_macs * E_MAC_J
+    else:
+        e_mac = sum(int(s.engine_ops.sum()) * E_MAC_J * (b / 8)
+                    for s, b in zip(per_core_stats, per_core_bits))
     e_rows = total_rows * E_CTRL_ROW_J
     # A-NEURON active energy: one update per MAC landing on it
     e_neuron = total_macs * P_ANEURON_W * T_ANEURON_S

@@ -35,9 +35,14 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Dense:
-    """A fully-connected layer: ``w[n_in, n_out]`` pruned float weights."""
+    """A fully-connected layer: ``w[n_in, n_out]`` pruned float weights.
+
+    ``bits`` pins this layer's stored weight bit-width (2/4/8 sign-magnitude
+    ladder words); ``None`` defers to ``map_model``'s ``quant_bits``.
+    """
 
     w: np.ndarray
+    bits: int | None = None
 
     @property
     def n_src(self) -> int:
@@ -53,7 +58,7 @@ class Dense:
         return self.w
 
     def with_stored(self, w: np.ndarray) -> "Dense":
-        return Dense(w=np.asarray(w))
+        return Dense(w=np.asarray(w), bits=self.bits)
 
     def unroll(self) -> np.ndarray:
         return np.asarray(self.w)
@@ -63,8 +68,10 @@ class Dense:
 
     @property
     def unique_weight_bytes(self) -> int:
-        """8-bit weights -> 1 byte per stored (nonzero) SRAM word."""
-        return int((np.asarray(self.w) != 0).sum())
+        """Bytes of A-SYN SRAM for the stored (nonzero) words at this
+        layer's bit-width (8-bit -> 1 byte per word, 4-bit -> half, ...)."""
+        n_words = int((np.asarray(self.w) != 0).sum())
+        return -(-n_words * (self.bits or 8) // 8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +88,7 @@ class Conv2d:
     in_shape: tuple[int, int, int]
     stride: int = 1
     padding: int = 0
+    bits: int | None = None       # stored-word bit-width; None = map default
 
     def __post_init__(self):
         c_out, c_in, kh, kw = self.kernel.shape
@@ -116,7 +124,8 @@ class Conv2d:
 
     def with_stored(self, kernel: np.ndarray) -> "Conv2d":
         return Conv2d(kernel=np.asarray(kernel), in_shape=self.in_shape,
-                      stride=self.stride, padding=self.padding)
+                      stride=self.stride, padding=self.padding,
+                      bits=self.bits)
 
     def _tap_indices(self):
         """For every nonzero kernel tap and every valid output position:
@@ -168,18 +177,22 @@ class Conv2d:
 
     @property
     def unique_weight_bytes(self) -> int:
-        """One byte per stored kernel tap — NOT per unrolled synapse."""
-        return int((np.asarray(self.kernel) != 0).sum())
+        """SRAM bytes for the stored kernel taps at this layer's bit-width —
+        NOT per unrolled synapse."""
+        n_words = int((np.asarray(self.kernel) != 0).sum())
+        return -(-n_words * (self.bits or 8) // 8)
 
 
-def SumPool2d(in_shape: tuple[int, int, int], pool: int = 2) -> Conv2d:
+def SumPool2d(in_shape: tuple[int, int, int], pool: int = 2,
+              bits: int | None = None) -> Conv2d:
     """Spiking sum-pooling as a fixed depthwise conv: ``pool x pool`` window,
     stride ``pool``, all taps 1.0, channel-diagonal kernel."""
     c, h, w = in_shape
     k = np.zeros((c, c, pool, pool), dtype=np.float32)
     for ci in range(c):
         k[ci, ci] = 1.0
-    return Conv2d(kernel=k, in_shape=in_shape, stride=pool, padding=0)
+    return Conv2d(kernel=k, in_shape=in_shape, stride=pool, padding=0,
+                  bits=bits)
 
 
 LayerSpec = Dense | Conv2d

@@ -54,6 +54,8 @@ class MemTables:
     n_weight_words: int = 0  # A-SYN words actually allocated (across engines);
                              # after compress_weight_words: words this table
                              # newly contributes to the shared dictionary
+    word_bits: int = 8       # stored A-SYN word width (sign-magnitude C2C
+                             # ladder words; 2/4/8) — prices SRAM bytes
     # physical per-engine word slots (len of each engine's allocation;
     # invariant under cross-layer compression — pointer-table entries)
     engine_words: np.ndarray | None = None          # int [M]
@@ -240,7 +242,8 @@ jax.tree_util.register_dataclass(
 def build_event_memories(w: np.ndarray, sol: MappingSolution,
                          n_engines: int, n_caps: int,
                          share_ids: np.ndarray | None = None,
-                         dedup: bool = False) -> MemTables:
+                         dedup: bool = False,
+                         word_bits: int = 8) -> MemTables:
     """Construct MEM_E2A / MEM_S&N / weight SRAM from a pruned weight matrix
     ``w[n_src, n_dest]`` and an ILP mapping solution.
 
@@ -257,6 +260,10 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
     layer structure produced them.  Replay is unchanged bit for bit — the
     merged words are exactly equal — while ``n_weight_words`` (and the
     weight-address field width, hence MEM_S&N row bytes) shrinks.
+
+    ``word_bits`` records the stored word width (the layer's quantization
+    bit-width) so downstream SRAM accounting prices words at their actual
+    size instead of a fixed byte.
     """
     n_src, n_dest = w.shape
     e2a_count = np.zeros(n_src, dtype=np.int64)
@@ -340,6 +347,7 @@ def build_event_memories(w: np.ndarray, sol: MappingSolution,
         mapping=sol,
         n_weight_words=int(sum(len(e) for e in w_entries)),
         engine_words=w_next.copy(),
+        word_bits=int(word_bits),
     )
 
 
@@ -365,11 +373,16 @@ class WeightCompression:
     slot_words: int
     dict_words: int
     ptr_bits: int
+    # total bits of the dictionary payload: each unique word is priced at the
+    # widest word_bits of the tables that reference it (0 = legacy 8-bit)
+    dict_bits_total: int = 0
 
     @property
     def dict_bytes(self) -> int:
-        """8-bit words -> 1 byte each."""
-        return self.dict_words
+        """Dictionary payload bytes at the stored word widths (legacy
+        tables without ``dict_bits_total``: 8-bit words -> 1 byte each)."""
+        bits = self.dict_bits_total or self.dict_words * 8
+        return (bits + 7) // 8
 
     @property
     def ptr_bytes(self) -> int:
@@ -389,6 +402,7 @@ class WeightCompression:
                 "slot_words": self.slot_words,
                 "dict_words": self.dict_words,
                 "ptr_bits": self.ptr_bits,
+                "dict_bits_total": self.dict_bits_total,
                 "dict_bytes": self.dict_bytes,
                 "ptr_bytes": self.ptr_bytes,
                 "compressed_bytes": self.compressed_bytes,
@@ -414,6 +428,7 @@ def compress_weight_words(tables: "list[MemTables]") -> WeightCompression:
     """
     index: dict[float, int] = {}
     values: list[float] = []
+    value_bits: list[int] = []
     synapse_words = 0
     slot_words = 0
     new_counts: list[int] = []
@@ -432,7 +447,12 @@ def compress_weight_words(tables: "list[MemTables]") -> WeightCompression:
                     idx = len(values)
                     index[v] = idx
                     values.append(v)
+                    value_bits.append(tb.word_bits)
                     new += 1
+                else:
+                    # a shared word must be readable at the widest precision
+                    # any referencing table stores it at
+                    value_bits[idx] = max(value_bits[idx], tb.word_bits)
                 ptr[j, a] = idx
         new_counts.append(new)
         ptrs.append(ptr)
@@ -445,7 +465,8 @@ def compress_weight_words(tables: "list[MemTables]") -> WeightCompression:
     return WeightCompression(
         synapse_words=synapse_words, slot_words=slot_words,
         dict_words=len(values),
-        ptr_bits=max(int(np.ceil(np.log2(max(k, 2)))), 1))
+        ptr_bits=max(int(np.ceil(np.log2(max(k, 2)))), 1),
+        dict_bits_total=int(sum(value_bits)))
 
 
 @dataclasses.dataclass

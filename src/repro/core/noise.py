@@ -84,6 +84,14 @@ def perturb_packed(key: jax.Array, packed, noise: AnalogNoise):
         return packed
     layers = []
     for li, layer in enumerate(packed.layers):
+        if getattr(layer, "w_packed", None) is not None:
+            # packed-operand tiles hold sub-byte integer codes; a relative
+            # f32 gain error is not representable in them.  The unpacked
+            # engine path executes the same model at any bit-width.
+            raise ValueError(
+                f"layer {li} uses packed sub-byte operands; analog noise "
+                "needs the f32 replay path — repack with "
+                "model.pack(packed_ops=False)")
         rounds = []
         for ri, rnd in enumerate(layer.rounds):
             k = jax.random.fold_in(jax.random.fold_in(key, li), ri)

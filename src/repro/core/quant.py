@@ -14,6 +14,12 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# Weight bit-widths the operand path supports end to end: quantization,
+# sign-magnitude packing, the packed event_synapse kernel, SRAM pricing, and
+# the energy model all key off this tuple (docs/PRECISION.md is locked to it).
+SUPPORTED_BITS = (2, 4, 8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,15 +61,20 @@ def quantize_symmetric(w: jax.Array, bits: int = 8, axis: int | None = None) -> 
 def c2c_ladder_value(q_row: jax.Array, bits: int = 8) -> jax.Array:
     """Ideal C2C-ladder output fraction for a digital word (paper eq. (2)).
 
-    For an unsigned word W with bits W_{n-1}..W_0:
-        frac = sum_{i=0}^{n-1} W_i * 2^{i-n}
-    Signed int8 is treated sign-magnitude (sign flips V_ref polarity).
-    Returns the fraction in [-1, 1), such that ``V_out = V_ref * frac``.
+    A ``bits``-wide sign-magnitude word carries 1 polarity bit and
+    ``bits-1`` magnitude bits W_{n-2}..W_0, so the ladder sums over the
+    magnitude lanes only:
+        frac = sum_{i=0}^{n-2} W_i * 2^{i-(n-1)} = magnitude / 2^{bits-1}
+    (the sign flips V_ref polarity).  Full-scale codes ``+-qmax`` therefore
+    reach ``(2^{bits-1}-1)/2^{bits-1}`` — one LSB short of the rail, the
+    intended ladder fraction.  Returns the fraction in (-1, 1), such that
+    ``V_out = V_ref * frac`` with ``V_ref = scale * 2^{bits-1}``.
     """
+    n_mag = bits - 1
     sign = jnp.where(q_row < 0, -1.0, 1.0)
     mag = jnp.abs(q_row.astype(jnp.int32))
-    weights = 2.0 ** (jnp.arange(bits) - bits)  # 2^{i-n}
-    bit_vals = jnp.stack([(mag >> i) & 1 for i in range(bits)], axis=-1).astype(jnp.float32)
+    weights = 2.0 ** (jnp.arange(n_mag) - n_mag)  # 2^{i-(n-1)}
+    bit_vals = jnp.stack([(mag >> i) & 1 for i in range(n_mag)], axis=-1).astype(jnp.float32)
     return sign * (bit_vals @ weights)
 
 
@@ -91,3 +102,65 @@ def quantize_pytree(params, bits: int = 8):
 def quantization_error(w: jax.Array, bits: int = 8) -> jax.Array:
     qt = quantize_symmetric(w, bits=bits)
     return jnp.max(jnp.abs(qt.dequantize() - w))
+
+
+# --------------------------------------------------- sub-byte operand packing
+
+def check_bits(bits: int) -> int:
+    """Validate a weight bit-width against the packed operand path."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(
+            f"unsupported weight bit-width {bits}; the packed operand path "
+            f"supports {SUPPORTED_BITS}")
+    return bits
+
+
+def lanes_per_byte(bits: int) -> int:
+    """How many ``bits``-wide sign-magnitude words one int8 lane carries."""
+    return 8 // check_bits(bits)
+
+
+def pack_signmag(q: np.ndarray, bits: int) -> np.ndarray:
+    """Pack signed integer codes into sign-magnitude sub-byte lanes.
+
+    ``q[..., n]`` (any signed integer dtype, values in ``[-qmax, qmax]``)
+    becomes ``int8[..., n * bits / 8]``: each code is stored as 1 sign bit +
+    ``bits-1`` magnitude bits, and ``8/bits`` consecutive destination lanes
+    share one byte (lane ``j`` lives in byte ``j // L`` at bit offset
+    ``(j % L) * bits`` — the layout the packed event_synapse kernel unpacks
+    in-kernel).  The last axis must be a multiple of ``8/bits``.
+    """
+    ell = lanes_per_byte(bits)
+    qmax = 2 ** (bits - 1) - 1
+    q = np.asarray(q)
+    if q.shape[-1] % ell:
+        raise ValueError(
+            f"last axis {q.shape[-1]} not a multiple of {ell} lanes/byte "
+            f"at {bits} bits — pad destinations first")
+    qi = q.astype(np.int64)
+    if qi.size and (qi.max() > qmax or qi.min() < -qmax):
+        raise ValueError(
+            f"codes outside the {bits}-bit sign-magnitude range "
+            f"[-{qmax}, {qmax}]: [{qi.min()}, {qi.max()}]")
+    words = ((qi < 0).astype(np.uint8) << (bits - 1)) \
+        | np.abs(qi).astype(np.uint8)
+    grouped = words.reshape(*q.shape[:-1], -1, ell)
+    packed = np.zeros(grouped.shape[:-1], dtype=np.uint8)
+    for s in range(ell):
+        packed |= grouped[..., s] << (s * bits)
+    return packed.view(np.int8)
+
+
+def unpack_signmag(packed, bits: int):
+    """Inverse of :func:`pack_signmag`: ``int8[..., m]`` packed lanes back to
+    integer codes ``[..., m * 8 / bits]`` (int32).  Pure ``jnp`` ops, so it
+    runs under jit and inside Pallas interpret mode; numpy arrays work too.
+    """
+    ell = lanes_per_byte(bits)
+    mask = (1 << bits) - 1
+    r = packed.astype(jnp.int32) & 0xFF        # undo int8 sign extension
+    lanes = jnp.stack([(r >> (s * bits)) & mask for s in range(ell)], axis=-1)
+    words = lanes.reshape(*packed.shape[:-1], packed.shape[-1] * ell)
+    mag = words & (2 ** (bits - 1) - 1)
+    sign = (words >> (bits - 1)) & 1
+    return mag - 2 * sign * mag

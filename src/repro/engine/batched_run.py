@@ -50,6 +50,7 @@ from repro.core.energy import (FRAME_CYCLES, AcceleratorSpec, EnergyReport,
                                energy_model)
 from repro.core.lif import LIFParams, lif_rollout
 from repro.core.memories import DispatchStats, PackedTables
+from repro.core.quant import check_bits, lanes_per_byte, pack_signmag
 from repro.kernels import ops
 from repro.kernels.event_synapse import DEFAULT_BLOCK_D
 
@@ -108,11 +109,19 @@ class PackedLayer:
     n_src: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_dest: int = dataclasses.field(metadata=dict(static=True), default=0)
     n_dest_pad: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # packed-operand path (pack_model(packed_ops=True)): the layer's fused
+    # weight tile as sign-magnitude codes packed ``8/bits`` destination lanes
+    # per int8 byte (quant.pack_signmag), plus the per-tensor quant scale —
+    # event dispatch then routes through the event_synapse_packed kernel and
+    # never materializes the f32 [n_src, n_dest_pad] tile on device
+    w_packed: jax.Array | None = None   # i8 [n_src, n_dest_pad * bits / 8]
+    scale: jax.Array | None = None      # f32 [1, 1]
+    bits: int = dataclasses.field(metadata=dict(static=True), default=8)
 
 
 jax.tree_util.register_dataclass(
-    PackedLayer, data_fields=["rounds"],
-    meta_fields=["n_src", "n_dest", "n_dest_pad"])
+    PackedLayer, data_fields=["rounds", "w_packed", "scale"],
+    meta_fields=["n_src", "n_dest", "n_dest_pad", "bits"])
 
 
 @dataclasses.dataclass
@@ -142,19 +151,75 @@ jax.tree_util.register_dataclass(
     meta_fields=["lif", "spec", "block_d"])
 
 
-def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedModel:
+def _pack_layer_codes(layer, w_host: np.ndarray, bits: int
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Host-side operand packing for one layer: recover the integer codes
+    from the replayed (dequantized) tile and pack them into sign-magnitude
+    sub-byte lanes.  Exactness is *asserted*, not assumed: every stored
+    table value must equal ``fl32(code * scale)`` bit for bit, which is what
+    makes the packed kernel's in-device dequantization reproduce the dense
+    path exactly."""
+    scale = np.float32(layer.scale)
+    q = np.rint(w_host / scale)
+    qmax = 2 ** (bits - 1) - 1
+    if np.abs(q).max(initial=0) > qmax:
+        raise ValueError(
+            f"recovered codes exceed the {bits}-bit range [-{qmax}, {qmax}] "
+            f"— layer was not quantized at {bits} bits")
+    if not (q.astype(np.float32) * scale == w_host).all():
+        raise ValueError(
+            "packed-operand exactness violated: table values are not "
+            "fl32(code * scale) — the layer's stored weights do not come "
+            "from quantize_symmetric at this scale")
+    w_packed = pack_signmag(q.astype(np.int8), bits)
+    return (jnp.asarray(w_packed),
+            jnp.asarray(scale, jnp.float32).reshape(1, 1))
+
+
+def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D,
+               packed_ops: bool = False) -> PackedModel:
     """Build the device-ready pytree from a mapped model.  The effective
     weights are replayed from the control memories (``MemTables
     .dense_weights`` / ``.replay_coo``), not taken from the original
     matrices — the batched engine executes what is actually in the SRAM.
     Shared-weight (conv) layers replay as COO triplets so the host never
-    materializes the unrolled ``n_src x n_dest`` matrix per layer."""
+    materializes the unrolled ``n_src x n_dest`` matrix per layer.
+
+    ``packed_ops=True`` ships every layer's weight tile as *packed
+    sign-magnitude codes* (``8/bits`` destination lanes per int8 byte) plus
+    the layer scale: the on-device weight footprint shrinks from 4 bytes to
+    ``bits/8`` bytes per synapse slot and dispatch routes through the
+    ``event_synapse_packed`` kernel, which unpacks the ladder words next to
+    the MACs.  The replayed values still come from the control memories, and
+    packing asserts ``fl32(code * scale)`` reproduces them bit for bit, so
+    the packed engine stays bit-exact with the unpacked one at every
+    bit-width (tested).  ``MappedModel.pack(packed_ops=None)`` auto-selects
+    this path when any layer is quantized below 8 bits."""
     compressed = getattr(model, "weight_dict", None) is not None
+    wdict_np = np.asarray(model.weight_dict, dtype=np.float32) \
+        if compressed else None
     layers = []
     for layer in model.layers:
+        # always recorded (prices sample_energy); only packed_ops uses it to
+        # select the packed kernel route
+        bits = check_bits(int(getattr(layer, "bits", 8)))
+        ell = lanes_per_byte(bits)
         n_dest_pad = _pad_dest(layer.n_dest, block_d)
+        if packed_ops:
+            if block_d % lanes_per_byte(2):
+                raise ValueError(
+                    f"packed operands need block_d divisible by "
+                    f"{lanes_per_byte(2)} byte lanes; got {block_d}")
+            # byte lanes must tile evenly: round the padded width up to a
+            # whole number of packed bytes (extra columns carry 0-codes,
+            # contribute exact 0.0 currents, and are sliced off post-LIF)
+            n_dest_pad = -(-n_dest_pad // ell) * ell
         shared = getattr(layer, "shared_weights", False)
         rounds = []
+        # packed layers replay the fused tile on the host instead of
+        # shipping per-round dense/COO weight data to the device
+        w_host = np.zeros((layer.n_src, n_dest_pad), dtype=np.float32) \
+            if packed_ops else None
         for rnd in layer.rounds:
             if compressed:
                 # every round replays through the shared-dictionary
@@ -162,6 +227,11 @@ def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedMode
                 # on device from PackedModel.weight_dict under jit
                 src, dest_local, widx = rnd.tables.replay_coo_ptr()
                 dest = rnd.neuron_ids[dest_local]
+                if packed_ops:
+                    np.add.at(w_host, (src, dest), wdict_np[widx])
+                    rounds.append(PackedRound(tables=rnd.tables.to_jax(),
+                                              w_dense=None))
+                    continue
                 rounds.append(PackedRound(
                     tables=rnd.tables.to_jax(), w_dense=None,
                     coo_src=jnp.asarray(src, dtype=jnp.int32),
@@ -170,6 +240,11 @@ def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedMode
             elif shared:
                 src, dest_local, vals = rnd.tables.replay_coo()
                 dest = rnd.neuron_ids[dest_local]
+                if packed_ops:
+                    np.add.at(w_host, (src, dest), vals)
+                    rounds.append(PackedRound(tables=rnd.tables.to_jax(),
+                                              w_dense=None))
+                    continue
                 rounds.append(PackedRound(
                     tables=rnd.tables.to_jax(), w_dense=None,
                     coo_src=jnp.asarray(src, dtype=jnp.int32),
@@ -177,14 +252,22 @@ def pack_model(model: MappedModel, block_d: int = DEFAULT_BLOCK_D) -> PackedMode
                     coo_val=jnp.asarray(vals)))
             else:
                 w_local = rnd.tables.dense_weights(len(rnd.neuron_ids))
+                if packed_ops:
+                    w_host[:, rnd.neuron_ids] += w_local
+                    rounds.append(PackedRound(tables=rnd.tables.to_jax(),
+                                              w_dense=None))
+                    continue
                 w_glob = np.zeros((layer.n_src, n_dest_pad), dtype=np.float32)
                 w_glob[:, rnd.neuron_ids] = w_local
                 rounds.append(PackedRound(tables=rnd.tables.to_jax(),
                                           w_dense=jnp.asarray(w_glob)))
+        w_packed = scale = None
+        if packed_ops:
+            w_packed, scale = _pack_layer_codes(layer, w_host, bits)
         layers.append(PackedLayer(rounds=rounds, n_src=layer.n_src,
-                                  n_dest=layer.n_dest, n_dest_pad=n_dest_pad))
-    wdict = jnp.asarray(model.weight_dict, dtype=jnp.float32) \
-        if compressed else None
+                                  n_dest=layer.n_dest, n_dest_pad=n_dest_pad,
+                                  w_packed=w_packed, scale=scale, bits=bits))
+    wdict = jnp.asarray(wdict_np) if compressed and not packed_ops else None
     return PackedModel(layers=layers, lif=model.lif, spec=model.spec,
                        block_d=block_d, weight_dict=wdict)
 
@@ -277,9 +360,16 @@ def _forward_impl(packed: PackedModel, spikes: jax.Array,
     for layer in packed.layers:
         events = ops.events_from_spikes(spikes.reshape(b * t, layer.n_src),
                                         _mem_e_depth(layer, max_events))
-        # rounds target disjoint destination columns -> one fused kernel call
-        w = _layer_weights(layer, packed.weight_dict)
-        currents = ops.event_synapse(events, w, block_d=packed.block_d)
+        if layer.w_packed is not None:
+            # packed-operand route: the kernel gathers sub-byte ladder words
+            # and dequantizes in-device — no f32 weight tile exists
+            currents = ops.event_synapse_packed(
+                events, layer.w_packed, layer.scale, bits=layer.bits,
+                block_d=packed.block_d)
+        else:
+            # rounds target disjoint dest columns -> one fused kernel call
+            w = _layer_weights(layer, packed.weight_dict)
+            currents = ops.event_synapse(events, w, block_d=packed.block_d)
         out = _lif_scan(currents.reshape(b, t, layer.n_dest_pad), packed.lif)
         spikes = out[..., :layer.n_dest]
         outs.append(spikes)
@@ -345,6 +435,7 @@ class BatchedRunResult:
     per_layer_util: list[np.ndarray]             # [B, T] float64
     overflow: list[np.ndarray]                   # [B, T] events dropped
     spec: AcceleratorSpec | None = None
+    per_layer_bits: list[int] | None = None      # stored word widths (energy)
 
     @property
     def batch(self) -> int:
@@ -357,10 +448,12 @@ class BatchedRunResult:
                       frame_cycles: int | None = FRAME_CYCLES) -> EnergyReport:
         """Same signature as :func:`repro.core.energy.energy_model`:
         ``frame_cycles`` defaults to the calibrated frame period, ``None``
-        means throughput mode."""
+        means throughput mode.  Mixed-precision models price the C2C MAC
+        energy at each layer's stored word width (``per_layer_bits``)."""
         assert self.spec is not None, "pack_model carried no AcceleratorSpec"
         return energy_model(self.spec, self.sample_stats(b),
-                            frame_cycles=frame_cycles)
+                            frame_cycles=frame_cycles,
+                            per_core_bits=self.per_layer_bits)
 
 
 def _layer_stats(in_spikes: np.ndarray, layer: PackedLayer,
@@ -415,10 +508,11 @@ def _finalize(packed: PackedModel, in_spikes: np.ndarray,
     dispatch accounting.  Shared by ``run_batched`` and ``run_sharded`` so
     the two entry points cannot drift apart on the stats surface."""
     out = np.asarray(layer_outs[-1])
+    bits = [l.bits for l in packed.layers]
     if not with_stats:
         return BatchedRunResult(out_spikes=out, per_layer_stats=[],
                                 per_layer_util=[], overflow=[],
-                                spec=packed.spec)
+                                spec=packed.spec, per_layer_bits=bits)
     stats_all, util_all, drop_all = [], [], []
     layer_in = np.asarray(in_spikes, dtype=np.float32)
     for li, layer in enumerate(packed.layers):
@@ -430,7 +524,7 @@ def _finalize(packed: PackedModel, in_spikes: np.ndarray,
         layer_in = np.asarray(layer_outs[li])
     return BatchedRunResult(out_spikes=out, per_layer_stats=stats_all,
                             per_layer_util=util_all, overflow=drop_all,
-                            spec=packed.spec)
+                            spec=packed.spec, per_layer_bits=bits)
 
 
 def run_batched(model: MappedModel | PackedModel, in_spikes: np.ndarray,

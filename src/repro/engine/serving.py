@@ -188,14 +188,18 @@ class RequestResult:
     util: list[np.ndarray]                      # [T_i] per layer
     overflow: list[np.ndarray]                  # [T_i] per layer
     spec: object = None
+    per_layer_bits: "list[int] | None" = None   # stored word widths (energy)
 
     def energy(self, frame_cycles: int | None = FRAME_CYCLES) -> EnergyReport:
         """Same signature as :func:`repro.core.energy.energy_model`: the
         frame period defaults to the calibrated ``FRAME_CYCLES`` constant,
-        ``None`` means throughput mode (no idle between frames)."""
+        ``None`` means throughput mode (no idle between frames).
+        Mixed-precision models price the C2C MAC energy at each layer's
+        stored word width."""
         assert self.spec is not None and self.stats, \
             "energy needs with_stats=True and an AcceleratorSpec"
-        return energy_model(self.spec, self.stats, frame_cycles=frame_cycles)
+        return energy_model(self.spec, self.stats, frame_cycles=frame_cycles,
+                            per_core_bits=self.per_layer_bits)
 
 
 def _slice_request(res: "br.BatchedRunResult", row: int, t: int,
@@ -203,7 +207,7 @@ def _slice_request(res: "br.BatchedRunResult", row: int, t: int,
     out = res.out_spikes[row, :t]
     if not with_stats:
         return RequestResult(out_spikes=out, stats=[], util=[], overflow=[],
-                             spec=res.spec)
+                             spec=res.spec, per_layer_bits=res.per_layer_bits)
     stats = []
     for bs in res.per_layer_stats:
         full = bs.sample(row)
@@ -217,7 +221,7 @@ def _slice_request(res: "br.BatchedRunResult", row: int, t: int,
         out_spikes=out, stats=stats,
         util=[u[row, :t] for u in res.per_layer_util],
         overflow=[o[row, :t] for o in res.overflow],
-        spec=res.spec)
+        spec=res.spec, per_layer_bits=res.per_layer_bits)
 
 
 # The per-engine-call telemetry record schema, shared by ``run_bucketed``

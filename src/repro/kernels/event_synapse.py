@@ -74,10 +74,127 @@ def event_synapse(events: jax.Array, weights: jax.Array,
     )(events, weights)
 
 
+def _event_synapse_packed_kernel(events_ref, packed_ref, scale_ref, out_ref,
+                                 *, bits: int):
+    """events [1, E] i32; packed [n_src, BDB] int8 (sign-magnitude lanes);
+    scale [1, 1] f32; out [1, BD] f32 with ``BD = BDB * 8/bits``.
+
+    The weight tile arrives packed — ``bits/32`` of the f32 VMEM footprint,
+    the twin of A-SYN storing sub-byte ladder words.  It is unpacked *once
+    per tile* before the event loop: split each byte into ``8/bits``
+    sub-words, then 1 sign + ``bits-1`` magnitude bits per word (the C2C
+    ladder's own format, quant.pack_signmag) and dequantize by the layer
+    scale — the DAC step at the ladder input.  The dequantized tile is a
+    loop operand (materialized at the fori_loop boundary), so the event loop
+    is gather+add only, with f32 partial sums bit-identical to the dense
+    kernel.  Keeping the multiply *inside* the loop is not an option: XLA
+    contracts mul+add into an FMA (even across optimization_barrier /
+    bitcast fences), skipping the intermediate rounding the dense path has.
+    """
+    ell = 8 // bits
+    mask = (1 << bits) - 1
+    mag_mask = (1 << (bits - 1)) - 1
+    events = events_ref[0, :]
+    n_events = events.shape[0]
+    n_src, bd_bytes = packed_ref.shape
+    bd = bd_bytes * ell
+    scale = scale_ref[0, 0]
+
+    r = packed_ref[...].astype(jnp.int32) & 0xFF  # undo int8 sign extension
+    lanes = jnp.stack([(r >> (s * bits)) & mask for s in range(ell)],
+                      axis=-1)                    # [n_src, BDB, L], dest-major
+    w = lanes.reshape(n_src, bd)
+    mag = w & mag_mask
+    sign = (w >> (bits - 1)) & 1
+    q = (mag - 2 * sign * mag).astype(jnp.float32)
+    w_tile = q * scale                            # fl32(q * scale), per elem
+
+    def body(e, acc):
+        idx = events[e]
+        valid = idx >= 0
+        safe = jnp.where(valid, idx, 0)
+        row = jax.lax.dynamic_slice_in_dim(w_tile, safe, 1, axis=0)  # [1, BD]
+        return acc + jnp.where(valid, row[0], jnp.zeros((bd,), acc.dtype))
+
+    acc = jax.lax.fori_loop(0, n_events, body, jnp.zeros((bd,), out_ref.dtype))
+    out_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_d", "interpret"))
+def event_synapse_packed(events: jax.Array, packed_w: jax.Array,
+                         scale: jax.Array, bits: int = 8,
+                         block_d: int = DEFAULT_BLOCK_D,
+                         interpret: bool = False) -> jax.Array:
+    """Packed-operand twin of :func:`event_synapse`.
+
+    events   [B, E] int32 (pad=-1)
+    packed_w [n_src, n_dest * bits / 8] int8 — sign-magnitude codes packed
+             ``8/bits`` destination lanes per byte (quant.pack_signmag)
+    scale    f32 scalar (or [1, 1]) — the layer's symmetric quant scale
+    returns  currents [B, n_dest] f32
+
+    The VMEM weight tile per grid point shrinks proportionally to ``bits``
+    (int8 codes at 8 bits are already 4x under f32; 4/2-bit lanes are 8x and
+    16x).  ``n_dest`` must be a multiple of ``8/bits`` so byte lanes align
+    with the dest tiling.
+    """
+    ell = 8 // bits
+    b, n_events = events.shape
+    n_src, n_bytes = packed_w.shape
+    n_dest = n_bytes * ell
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    if n_events == 0 or b == 0:
+        return jnp.zeros((b, n_dest), jnp.float32)
+    bd = min(block_d, n_dest)
+    assert bd % ell == 0, \
+        f"block_d={bd} not a multiple of {ell} lanes/byte at {bits} bits"
+    assert n_dest % bd == 0, f"n_dest={n_dest} not divisible by block_d={bd}"
+    grid = (b, n_dest // bd)
+    return pl.pallas_call(
+        functools.partial(_event_synapse_packed_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, events.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_src, bd // ell), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n_dest), jnp.float32),
+        interpret=interpret,
+    )(events, packed_w, scale)
+
+
 def events_from_spikes(spikes: jax.Array, max_events: int) -> jax.Array:
     """Convert a dense spike vector batch [B, n_src] to a padded event list
     [B, max_events] (int32, pad=-1) — the software MEM_E writer.  Events
-    beyond max_events are dropped (counted by callers via overflow_count)."""
+    beyond max_events are dropped (counted by callers via overflow_count).
+
+    Stable O(n) compaction: each spiking source's slot is its exclusive
+    prefix count along the row (cumsum is monotone in source index, so the
+    emitted order is ascending — the hardware FIFO write order and the
+    accumulation order the oracle equivalence relies on).  Non-spiking and
+    overflowing sources scatter into a trash slot that is sliced off, so no
+    O(n log n) argsort and no data-dependent shapes.
+
+    A row of ``n`` sources can emit at most ``n`` events, so the event list
+    is at most ``n`` wide even when ``max_events`` exceeds it — the same
+    clamp the argsort reference inherits from slicing past the row length.
+    """
+    b, n = spikes.shape
+    max_events = min(int(max_events), n)
+    spk = spikes > 0
+    pos = jnp.cumsum(spk, axis=1, dtype=jnp.int32) - 1    # slot if spiking
+    pos = jnp.where(spk & (pos < max_events), pos, max_events)
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    out = jnp.full((b, max_events + 1), -1, jnp.int32)
+    out = out.at[jnp.arange(b, dtype=jnp.int32)[:, None], pos].set(idx)
+    return out[:, :max_events]
+
+
+def _events_from_spikes_argsort(spikes: jax.Array, max_events: int) -> jax.Array:
+    """The original O(n log n) full-width argsort MEM_E writer — kept as the
+    bit-identical reference :func:`events_from_spikes`'s cumsum compaction is
+    asserted against (tests/test_kernels.py, kernels_bench timing check)."""
     b, n = spikes.shape
     idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
     # sort spiking indices to the front: key = (1-spike)*n + arange

@@ -8,9 +8,12 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.quant import check_bits
 from repro.kernels import ref  # noqa: F401  (re-exported for convenience)
 from repro.kernels.c2c_matmul import c2c_matmul as _c2c_matmul
 from repro.kernels.event_synapse import (event_synapse as _event_synapse,
+                                         event_synapse_packed as
+                                         _event_synapse_packed,
                                          events_from_spikes, overflow_count)
 from repro.kernels.lif_update import lif_update as _lif_update
 
@@ -23,6 +26,13 @@ def event_synapse(events, weights, block_d: int = 256):
     return _event_synapse(events, weights, block_d=block_d, interpret=_on_cpu())
 
 
+def event_synapse_packed(events, packed_w, scale, *, bits: int,
+                         block_d: int = 256):
+    return _event_synapse_packed(events, packed_w, scale,
+                                 bits=check_bits(bits), block_d=block_d,
+                                 interpret=_on_cpu())
+
+
 def lif_update(v, current, *, beta=0.9, threshold=1.0, v_reset=0.0,
                block=(8, 512)):
     return _lif_update(v, current, beta=beta, threshold=threshold,
@@ -33,5 +43,5 @@ def c2c_matmul(x, w_q, scale, bm: int = 128, bk: int = 128, bn: int = 128):
     return _c2c_matmul(x, w_q, scale, bm=bm, bk=bk, bn=bn, interpret=_on_cpu())
 
 
-__all__ = ["event_synapse", "lif_update", "c2c_matmul",
-           "events_from_spikes", "overflow_count", "ref"]
+__all__ = ["event_synapse", "event_synapse_packed", "lif_update",
+           "c2c_matmul", "events_from_spikes", "overflow_count", "ref"]

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import c2c_ladder_value
+from repro.core.quant import c2c_ladder_value, unpack_signmag
 
 
 def event_synapse_ref(events: jax.Array, weights: jax.Array) -> jax.Array:
@@ -22,6 +22,17 @@ def event_synapse_ref(events: jax.Array, weights: jax.Array) -> jax.Array:
     mask = (events >= 0)[..., None]                      # [B, E, 1]
     rows = weights[jnp.clip(events, 0), :]               # [B, E, n_dest]
     return jnp.sum(jnp.where(mask, rows, 0.0), axis=1)
+
+
+def event_synapse_packed_ref(events: jax.Array, packed_w: jax.Array,
+                             scale: jax.Array, bits: int) -> jax.Array:
+    """Packed-operand oracle: unpack the sign-magnitude lanes to a dense
+    dequantized f32 matrix, then run the dense event accumulation.  The
+    kernel must match this bit for bit (same per-element ``q * scale``
+    product, same accumulation order)."""
+    q = unpack_signmag(packed_w, bits)                   # [n_src, n_dest]
+    w = q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32).reshape(())
+    return event_synapse_ref(events, w)
 
 
 def lif_update_ref(v: jax.Array, current: jax.Array, beta: float,
@@ -45,11 +56,12 @@ def c2c_matmul_ladder_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array,
                           bits: int = 8) -> jax.Array:
     """Bit-serial evaluation through the *ideal C2C ladder* (paper eq. (2)):
 
-        V_out = V_ref * sum_i W_i 2^{i-n},   V_ref = scale * 2^n
+        V_out = V_ref * sum_i W_i 2^{i-(n-1)},   V_ref = scale * 2^{n-1}
 
-    Proves the kernel computes exactly what the analog ladder would ideally
-    produce (sign-magnitude handling per quant.py).
+    with 1 sign bit selecting V_ref polarity and ``bits-1`` magnitude lanes
+    W_{n-2}..W_0.  Proves the kernel computes exactly what the analog ladder
+    would ideally produce (sign-magnitude handling per quant.py).
     """
-    frac = c2c_ladder_value(w_q, bits=bits)              # q / 2^n in [-1, 1)
-    v_ref = scale * (2.0**bits)
+    frac = c2c_ladder_value(w_q, bits=bits)       # sign * mag / 2^{bits-1}
+    v_ref = scale * (2.0 ** (bits - 1))
     return x @ (frac * v_ref)

@@ -7,11 +7,14 @@ IS part of the schema lock.  The markdown link checker runs here too, so a
 renamed doc or heading breaks tier 1, not a reader.
 """
 
+import inspect
 import os
 import re
 import subprocess
 import sys
 
+from repro.core.precision import PARETO_POINT_KEYS, search_bits
+from repro.core.quant import SUPPORTED_BITS
 from repro.engine import (ANOMALY_KINDS, HIST_KEYS, METRIC_KEYS,
                           PER_MODEL_KEYS, SCENARIOS, SPAN_KINDS,
                           TELEMETRY_KEYS)
@@ -19,6 +22,7 @@ from repro.engine import (ANOMALY_KINDS, HIST_KEYS, METRIC_KEYS,
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SERVING_MD = os.path.join(REPO, "docs", "SERVING.md")
 OBSERVABILITY_MD = os.path.join(REPO, "docs", "OBSERVABILITY.md")
+PRECISION_MD = os.path.join(REPO, "docs", "PRECISION.md")
 
 
 def _table_keys(text: str, section: str) -> tuple[str, ...]:
@@ -102,6 +106,43 @@ def test_histogram_table_matches_code():
     assert doc == HIST_KEYS, (
         f"docs/OBSERVABILITY.md histogram table is out of sync with "
         f"HIST_KEYS\n  documented: {doc}\n  code:       {HIST_KEYS}")
+
+
+def _precision_md() -> str:
+    with open(PRECISION_MD, encoding="utf-8") as f:
+        return f.read()
+
+
+def test_supported_bits_table_matches_code():
+    """docs/PRECISION.md documents exactly the widths the quantizer and the
+    packed kernel accept, ascending — the operator half of SUPPORTED_BITS."""
+    doc = _table_keys(_precision_md(), "## Supported bit-widths")
+    want = tuple(str(b) for b in sorted(SUPPORTED_BITS))
+    assert doc == want, (
+        f"docs/PRECISION.md bit-width table is out of sync with "
+        f"SUPPORTED_BITS\n  documented: {doc}\n  code:       {want}")
+
+
+def test_search_knob_table_matches_signature():
+    """Every keyword-only knob of search_bits is documented, in signature
+    order — renaming a knob without the doc (or vice versa) fails here."""
+    doc = _table_keys(_precision_md(), "### Search knobs")
+    sig = inspect.signature(search_bits)
+    want = tuple(name for name, p in sig.parameters.items()
+                 if p.kind is inspect.Parameter.KEYWORD_ONLY)
+    assert doc == want, (
+        f"docs/PRECISION.md search-knob table is out of sync with "
+        f"search_bits' signature\n  documented: {doc}\n  code:       {want}")
+
+
+def test_pareto_schema_table_matches_code():
+    """The BENCH_precision.json point schema is documented key for key —
+    the dashboard-consumer half of PARETO_POINT_KEYS."""
+    doc = _table_keys(_precision_md(), "## Pareto artifact schema")
+    assert doc == PARETO_POINT_KEYS, (
+        f"docs/PRECISION.md Pareto table is out of sync with "
+        f"PARETO_POINT_KEYS\n  documented: {doc}\n"
+        f"  code:       {PARETO_POINT_KEYS}")
 
 
 def test_markdown_links_resolve():

@@ -75,7 +75,8 @@ def build_case(case: dict):
         else:
             raise ValueError(f"unknown layer kind {ld['kind']!r}")
     lif = LIFParams(beta=case["beta"], threshold=case["threshold"])
-    model = map_model(specs, spec, lif=lif,
+    quant_bits = case.get("quant_bits", 8)   # int or per-layer list (mixed)
+    model = map_model(specs, spec, lif=lif, quant_bits=quant_bits,
                       compress=bool(case.get("compress", False)))
     n_in = specs[0].n_src
     spikes = (rng.random((case["batch"], case["t"], n_in))
@@ -113,13 +114,15 @@ def check_and_record(case: dict):
 # ------------------------------------------------------------- strategies
 
 def _dense_case(seed, widths, density, batch, t, p_spike, max_events,
-                engines, caps, beta=0.8, threshold=0.7, compress=False):
+                engines, caps, beta=0.8, threshold=0.7, compress=False,
+                quant_bits=8):
     return {"seed": seed, "in_shape": [widths[0], 1, 1],
             "layers": [{"kind": "dense", "n_out": n, "density": density}
                        for n in widths[1:]],
             "batch": batch, "t": t, "p_spike": p_spike,
             "max_events": max_events, "n_engines": engines, "n_caps": caps,
-            "beta": beta, "threshold": threshold, "compress": compress}
+            "beta": beta, "threshold": threshold, "compress": compress,
+            "quant_bits": quant_bits}
 
 
 try:
@@ -133,6 +136,12 @@ if HAVE_HYPOTHESIS:
     def dense_cases(draw):
         n_layers = draw(st.integers(1, 3))
         widths = [draw(st.integers(3, 20)) for _ in range(n_layers + 1)]
+        # mixed-precision draws: uniform 8-bit, or one stored width per
+        # layer — sub-8 layers route through the packed-operand kernel
+        quant_bits = draw(st.one_of(
+            st.just(8),
+            st.lists(st.sampled_from([4, 8]),
+                     min_size=n_layers, max_size=n_layers)))
         return _dense_case(
             seed=draw(st.integers(0, 2**16)),
             widths=widths,
@@ -146,7 +155,8 @@ if HAVE_HYPOTHESIS:
             caps=draw(st.integers(2, 6)),      # widths>caps*engines => rounds
             beta=draw(st.sampled_from([0.5, 0.8, 0.9])),
             threshold=draw(st.sampled_from([0.4, 0.7, 1.0])),
-            compress=draw(st.booleans()))
+            compress=draw(st.booleans()),
+            quant_bits=quant_bits)
 
     @st.composite
     def conv_cases(draw):
@@ -168,6 +178,10 @@ if HAVE_HYPOTHESIS:
                            "density": draw(st.floats(0.3, 1.0))})
         layers.append({"kind": "dense", "n_out": draw(st.integers(2, 6)),
                        "density": draw(st.floats(0.4, 1.0))})
+        quant_bits = draw(st.one_of(
+            st.just(8),
+            st.lists(st.sampled_from([4, 8]),
+                     min_size=len(layers), max_size=len(layers))))
         return {"seed": draw(st.integers(0, 2**16)), "in_shape": [c, h, h],
                 "layers": layers,
                 "batch": draw(st.integers(1, 3)),
@@ -178,7 +192,8 @@ if HAVE_HYPOTHESIS:
                 "n_engines": draw(st.integers(2, 4)),
                 "n_caps": draw(st.integers(3, 8)),
                 "beta": 0.8, "threshold": draw(st.sampled_from([0.5, 0.9])),
-                "compress": draw(st.booleans())}
+                "compress": draw(st.booleans()),
+                "quant_bits": quant_bits}
 else:                           # bare env: decorators below become skips
     def dense_cases():
         return None
@@ -244,13 +259,41 @@ def _sweep_cases():
             "n_engines": 3, "n_caps": 5,
             "beta": 0.9, "threshold": 0.5,
             "compress": seed % 2 == 0})
+    # mixed-precision: per-layer 2/4/8-bit words through the packed-operand
+    # kernel, crossed with compression and MEM_E caps
+    bit_menu = [[4, 8], [8, 4], [4, 4], [2, 8], [8, 2], [2, 4]]
+    for seed in range(8):
+        cases.append(_dense_case(
+            seed=3000 + seed, widths=[8 + seed % 5, 26, 6],
+            density=0.4 + 0.05 * (seed % 6), batch=2, t=5,
+            p_spike=0.15 + 0.05 * (seed % 5),
+            max_events=None if seed % 2 else 5,
+            engines=2 + seed % 2, caps=4 + seed % 3,
+            compress=seed % 2 == 1,
+            quant_bits=bit_menu[seed % len(bit_menu)]))
+    for seed in range(8):
+        cases.append({
+            "seed": 4000 + seed, "in_shape": [2, 6, 6],
+            "layers": [
+                {"kind": "conv", "c_out": 2, "k": 3, "stride": 1,
+                 "padding": 1, "density": 0.7},
+                {"kind": "pool", "pool": 2},
+                {"kind": "dense", "n_out": 5, "density": 0.6}],
+            "batch": 2, "t": 4, "p_spike": 0.2 + 0.04 * (seed % 4),
+            "max_events": None if seed % 3 else 6,
+            "n_engines": 3, "n_caps": 5,
+            "beta": 0.8, "threshold": 0.6,
+            "compress": seed % 2 == 0,
+            "quant_bits": [bit_menu[seed % len(bit_menu)][0], 8,
+                           bit_menu[seed % len(bit_menu)][1]]})
     return cases
 
 
-@pytest.mark.parametrize("idx", range(48))
+@pytest.mark.parametrize("idx", range(64))
 def test_seeded_sweep(idx):
-    """Hypothesis-free twin of the property tests: 48 deterministic cases
-    spanning dense multi-round, conv stride/pad/pool, and MEM_E caps."""
+    """Hypothesis-free twin of the property tests: 64 deterministic cases
+    spanning dense multi-round, conv stride/pad/pool, MEM_E caps, and
+    mixed-precision packed-operand stacks."""
     check_case(_sweep_cases()[idx])
 
 

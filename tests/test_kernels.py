@@ -7,9 +7,12 @@ import pytest
 
 from _hypothesis_compat import given, settings, st
 
+from repro.core.quant import pack_signmag
 from repro.kernels import ops
+from repro.kernels.event_synapse import _events_from_spikes_argsort
 from repro.kernels.ref import (c2c_matmul_ladder_ref, c2c_matmul_ref,
-                               event_synapse_ref, lif_update_ref)
+                               event_synapse_packed_ref, event_synapse_ref,
+                               lif_update_ref)
 
 
 # ------------------------------------------------------------ event_synapse
@@ -58,6 +61,109 @@ def test_event_synapse_property(seed, density):
     out = ops.event_synapse(ev, w)
     # equivalence with the dense matmul (the A-SYN contract)
     np.testing.assert_allclose(out, spikes @ w, atol=1e-4)
+
+
+# ----------------------------------------------------- event_synapse_packed
+
+def _random_codes(rng, n_src, n_dest, bits):
+    qmax = 2 ** (bits - 1) - 1
+    return rng.integers(-qmax, qmax + 1, (n_src, n_dest)).astype(np.int8)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("n_src,n_dest,block_d", [
+    (16, 128, 128), (40, 256, 64), (7, 64, 32),
+])
+def test_event_synapse_packed_matches_ref(rng, bits, n_src, n_dest, block_d):
+    """Packed sub-byte kernel == unpack-then-dense reference at every
+    supported bit-width (tentpole contract; allclose — the reference
+    reduces in a different order, bit-exactness is vs the dense kernel)."""
+    q = _random_codes(rng, n_src, n_dest, bits)
+    packed = jnp.asarray(pack_signmag(q, bits))
+    scale = np.float32(0.013)
+    spikes = jnp.asarray((rng.random((3, n_src)) < 0.3).astype(np.float32))
+    ev = ops.events_from_spikes(spikes, max_events=n_src)
+    out = ops.event_synapse_packed(ev, packed, scale, bits=bits,
+                                   block_d=block_d)
+    ref = event_synapse_packed_ref(ev, packed, scale, bits=bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_event_synapse_packed_bit_exact_vs_dense(rng, bits):
+    """The packed kernel is BIT-EXACT against the f32 dense kernel on the
+    dequantized weights — the invariant that lets the engine switch operand
+    layouts without perturbing a single output spike."""
+    q = _random_codes(rng, 24, 128, bits)
+    scale = np.float32(0.007)
+    w = jnp.asarray(q.astype(np.float32) * scale)
+    packed = jnp.asarray(pack_signmag(q, bits))
+    spikes = jnp.asarray((rng.random((4, 24)) < 0.4).astype(np.float32))
+    ev = ops.events_from_spikes(spikes, max_events=24)
+    dense = ops.event_synapse(ev, w)
+    pk = ops.event_synapse_packed(ev, packed, scale, bits=bits)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(dense))
+
+
+def test_event_synapse_packed_all_padding(rng):
+    q = _random_codes(rng, 8, 64, 4)
+    packed = jnp.asarray(pack_signmag(q, 4))
+    ev = jnp.full((2, 4), -1, jnp.int32)
+    out = ops.event_synapse_packed(ev, packed, np.float32(0.1), bits=4)
+    assert np.all(np.asarray(out) == 0)
+
+
+def test_event_synapse_packed_rejects_bad_bits(rng):
+    q = _random_codes(rng, 8, 64, 4)
+    packed = jnp.asarray(pack_signmag(q, 4))
+    ev = jnp.full((1, 2), -1, jnp.int32)
+    with pytest.raises(ValueError):
+        ops.event_synapse_packed(ev, packed, np.float32(0.1), bits=3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([2, 4, 8]),
+       density=st.floats(0.0, 0.9))
+def test_event_synapse_packed_property(seed, bits, density):
+    """Random dense stacks: packed kernel == dequantized dense matmul at
+    every supported width (allclose; the matmul reduces in a different
+    order) AND bit-exact vs the gather-order dense kernel."""
+    rng = np.random.default_rng(seed)
+    q = _random_codes(rng, 20, 192, bits)
+    scale = np.float32(0.02)
+    w = q.astype(np.float32) * scale
+    packed = jnp.asarray(pack_signmag(q, bits))
+    spikes = jnp.asarray((rng.random((2, 20)) < density).astype(np.float32))
+    ev = ops.events_from_spikes(spikes, max_events=20)
+    out = ops.event_synapse_packed(ev, packed, scale, bits=bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(spikes) @ w,
+                               atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ops.event_synapse(ev, jnp.asarray(w))))
+
+
+# ------------------------------------------------- event-stream compaction
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), density=st.floats(0.0, 1.0),
+       max_ev=st.integers(1, 48))
+def test_events_cumsum_matches_argsort(seed, density, max_ev):
+    """The O(n) cumsum-based stable compaction is bit-identical to the
+    full-width argsort it replaced — same events, same order, same padding
+    — including under overflow truncation."""
+    rng = np.random.default_rng(seed)
+    spikes = jnp.asarray((rng.random((3, 40)) < density).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(ops.events_from_spikes(spikes, max_ev)),
+        np.asarray(_events_from_spikes_argsort(spikes, max_ev)))
+
+
+def test_events_cumsum_matches_argsort_edges():
+    for spikes in (jnp.zeros((2, 16)), jnp.ones((2, 16))):
+        for max_ev in (1, 8, 16, 32):
+            np.testing.assert_array_equal(
+                np.asarray(ops.events_from_spikes(spikes, max_ev)),
+                np.asarray(_events_from_spikes_argsort(spikes, max_ev)))
 
 
 # ---------------------------------------------------------------- lif_update

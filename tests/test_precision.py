@@ -1,0 +1,188 @@
+"""Per-layer bit-width search + mixed-precision engine/energy plumbing."""
+
+import numpy as np
+import pytest
+
+from repro.core.accelerator import map_model, run
+from repro.core.energy import ACCEL_1, AcceleratorSpec, energy_model
+from repro.core.layers import Dense
+from repro.core.lif import LIFParams
+from repro.core.precision import (PARETO_POINT_KEYS, PrecisionSearchResult,
+                                  agreement, energy_per_frame, pareto_point,
+                                  search_bits)
+
+SPEC = AcceleratorSpec("prec-test", n_cores=4, n_engines=8, n_caps=16,
+                       weight_mem_bytes=1 << 20)
+
+
+def _stack(rng, sizes=(24, 32, 10), scale=0.6):
+    return [rng.normal(0, scale, (sizes[i], sizes[i + 1])).astype(np.float32)
+            for i in range(len(sizes) - 1)]
+
+
+def _probe(rng, n_in, t=10, p=0.3):
+    return (rng.random((t, n_in)) < p).astype(np.float32)
+
+
+# ------------------------------------------------------------- search_bits
+
+def test_search_zero_budget_keeps_8bit(rng):
+    ws = _stack(rng)
+    res = search_bits(ws, SPEC, _probe(rng, 24), budget=0.0)
+    assert res.per_layer_bits == [8, 8]
+    assert res.agreement == 1.0
+    # every sub-8 candidate was evaluated and rejected (or layers never
+    # reached — greedy stops a layer at its first rejected width)
+    assert all(not s.accepted or s.agreement >= 1.0 for s in res.history)
+
+
+def test_search_loose_budget_downgrades(rng):
+    ws = _stack(rng)
+    res = search_bits(ws, SPEC, _probe(rng, 24), budget=0.5)
+    assert any(b < 8 for b in res.per_layer_bits), \
+        "a 50% disagreement budget must buy at least one sub-8 layer"
+    assert res.agreement >= 0.5
+    assert all(b in (2, 4, 8) for b in res.per_layer_bits)
+
+
+def test_search_agreement_floor_respected(rng):
+    ws = _stack(rng)
+    budget = 0.1
+    res = search_bits(ws, SPEC, _probe(rng, 24), budget=budget)
+    assert res.agreement >= 1.0 - budget
+    for step in res.history:
+        if step.accepted:
+            assert step.agreement >= 1.0 - budget
+
+
+def test_search_energy_never_increases(rng):
+    ws = _stack(rng)
+    res = search_bits(ws, SPEC, _probe(rng, 24), budget=0.5)
+    base = res.baseline_energy.dynamic_j + res.baseline_energy.static_j
+    fin = res.energy.dynamic_j + res.energy.static_j
+    assert fin <= base
+    assert 0.0 <= res.energy_reduction <= 1.0
+
+
+def test_search_respects_pinned_spec_bits(rng):
+    ws = _stack(rng)
+    pinned = [Dense(w=ws[0], bits=4), Dense(w=ws[1])]
+    res = search_bits(pinned, SPEC, _probe(rng, 24), budget=0.0)
+    # the pin survives AND the search never touched the pinned layer
+    assert res.per_layer_bits[0] == 4
+    assert all(s.layer != 0 for s in res.history)
+
+
+def test_search_choices_validation(rng):
+    ws = _stack(rng)
+    probe = _probe(rng, 24)
+    with pytest.raises(ValueError, match="8-bit baseline"):
+        search_bits(ws, SPEC, probe, choices=(4, 2))
+    with pytest.raises(ValueError):
+        search_bits(ws, SPEC, probe, choices=(8, 3))
+    with pytest.raises(ValueError, match="budget"):
+        search_bits(ws, SPEC, probe, budget=1.5)
+    with pytest.raises(ValueError, match="probe_spikes"):
+        search_bits(ws, SPEC, probe[None])
+
+
+def test_search_result_config_runs(rng):
+    """The chosen config maps, runs, and its modeled energy matches the
+    result's — the search's score is the real model, not an estimate."""
+    ws = _stack(rng)
+    probe = _probe(rng, 24)
+    res = search_bits(ws, SPEC, probe, budget=0.3)
+    m = map_model(ws, SPEC, quant_bits=res.per_layer_bits)
+    rr = run(m, probe)
+    assert [l.bits for l in m.layers] == res.per_layer_bits
+    assert rr.energy.breakdown["E_mac_J"] == \
+        res.energy.breakdown["E_mac_J"]
+
+
+def test_search_8bit_only_choices_is_identity(rng):
+    ws = _stack(rng)
+    res = search_bits(ws, SPEC, _probe(rng, 24), choices=(8,))
+    assert res.per_layer_bits == [8, 8]
+    assert res.history == []
+    assert isinstance(res, PrecisionSearchResult)
+
+
+# ------------------------------------------------------------ pareto points
+
+def test_pareto_point_schema(rng):
+    ws = _stack(rng)
+    probe = _probe(rng, 24)
+    m = map_model(ws, SPEC, quant_bits=[4, 8])
+    rr = run(m, probe)
+    pt = pareto_point("mixed", [4, 8], rr, m, 0.97, events_per_s=1e5)
+    assert tuple(pt) == PARETO_POINT_KEYS
+    assert pt["per_layer_bits"] == [4, 8]
+    assert pt["weight_sram_bytes"] == sum(l.sram_bytes for l in m.layers)
+    assert pt["energy_per_frame_j"] == \
+        energy_per_frame(rr.energy, probe.shape[0])
+    assert pt["events_per_s"] == 1e5
+
+
+def test_agreement_basics():
+    a = np.array([[1.0, 0.0], [0.0, 1.0]])
+    assert agreement(a, a) == 1.0
+    assert agreement(a, 1 - a) == 0.0
+    with pytest.raises(ValueError):
+        agreement(a, a[:1])
+
+
+# ----------------------------------------------- energy model bit scaling
+
+def test_energy_scales_with_bits(rng):
+    ws = _stack(rng)
+    probe = _probe(rng, 24)
+    stats = run(map_model(ws, SPEC, quant_bits=8), probe).per_layer_stats
+    e8 = energy_model(SPEC, stats, per_core_bits=[8, 8])
+    e4 = energy_model(SPEC, stats, per_core_bits=[4, 4])
+    e2 = energy_model(SPEC, stats, per_core_bits=[2, 2])
+    # only the C2C MAC term scales, and it scales ~bits/8
+    assert e8.breakdown["E_mac_J"] > e4.breakdown["E_mac_J"] \
+        > e2.breakdown["E_mac_J"] > 0
+    np.testing.assert_allclose(e4.breakdown["E_mac_J"],
+                               e8.breakdown["E_mac_J"] / 2, rtol=1e-12)
+    assert e8.breakdown["E_ctrl_rows_J"] == e4.breakdown["E_ctrl_rows_J"]
+    assert e8.breakdown["E_aneuron_J"] == e4.breakdown["E_aneuron_J"]
+    # uniform 8-bit takes the legacy single-product path: bit-identical
+    legacy = energy_model(SPEC, stats)
+    assert e8.breakdown["E_mac_J"] == legacy.breakdown["E_mac_J"]
+
+
+def test_energy_per_core_bits_length_checked(rng):
+    ws = _stack(rng)
+    stats = run(map_model(ws, SPEC), _probe(rng, 24)).per_layer_stats
+    with pytest.raises(ValueError, match="per_core_bits"):
+        energy_model(SPEC, stats, per_core_bits=[8])
+
+
+# ------------------------------------------- engine interaction edge cases
+
+def test_packed_ops_model_rejects_analog_noise(rng):
+    from repro.core.noise import AnalogNoise, perturb_packed
+    import jax
+    ws = _stack(rng)
+    m = map_model(ws, SPEC, quant_bits=[4, 8])
+    packed = m.pack()            # auto-selects packed operands (4-bit layer)
+    with pytest.raises(ValueError, match="packed sub-byte"):
+        perturb_packed(jax.random.key(0), packed,
+                       AnalogNoise(weight_sigma=0.05))
+    # the f32 replay path of the SAME mapped model accepts noise
+    replay = m.pack(packed_ops=False)
+    noisy = perturb_packed(jax.random.key(0), replay,
+                           AnalogNoise(weight_sigma=0.05))
+    assert noisy is not replay
+
+
+def test_per_layer_bits_reach_engine_energy(rng):
+    from repro.engine import run_batched
+    ws = _stack(rng)
+    probe = _probe(rng, 24)
+    m = map_model(ws, SPEC, quant_bits=[4, 8])
+    res = run_batched(m, probe[None])
+    assert res.per_layer_bits == [4, 8]
+    oracle = run(m, probe)
+    assert res.sample_energy(0) == oracle.energy

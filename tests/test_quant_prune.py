@@ -25,24 +25,40 @@ def test_quant_roundtrip_int8_range(rng):
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 1000))
 def test_c2c_ladder_equals_q_over_2n(seed):
-    """eq. (2): sum W_i 2^{i-n} == magnitude/2^n (sign-magnitude)."""
+    """eq. (2): sum W_i 2^{i-(n-1)} == magnitude/2^{n-1} (sign-magnitude:
+    1 sign bit + ``bits-1`` magnitude lanes on the ladder)."""
     rng = np.random.default_rng(seed)
     q = jnp.asarray(rng.integers(-127, 128, size=(16,)).astype(np.int8))
     frac = c2c_ladder_value(q, bits=8)
     np.testing.assert_allclose(np.asarray(frac),
-                               np.asarray(q, np.float32) / 256.0, atol=1e-7)
+                               np.asarray(q, np.float32) / 128.0, atol=1e-7)
 
 
 def test_ladder_times_scale_recovers_dequant(rng):
     w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
     qt = quantize_symmetric(w, bits=8)
-    v_ref = qt.scale * 256.0
+    v_ref = qt.scale * 128.0           # V_ref = scale * 2^{bits-1}
     np.testing.assert_allclose(np.asarray(c2c_ladder_value(qt.q) * v_ref),
                                np.asarray(qt.dequantize()), atol=1e-5)
 
 
 @settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 1000), bits=st.sampled_from([4, 6, 8]))
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([2, 4, 8]))
+def test_ladder_roundtrip_every_supported_bitwidth(seed, bits):
+    """S1 lock: at every supported bit-width, ladder fraction * V_ref
+    recovers the dequantized weight exactly (the packed kernel depends on
+    this identity to stay bit-exact with the dense path)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    qt = quantize_symmetric(w, bits=bits)
+    v_ref = qt.scale * 2.0 ** (bits - 1)
+    np.testing.assert_allclose(
+        np.asarray(c2c_ladder_value(qt.q, bits=bits) * v_ref),
+        np.asarray(qt.dequantize()), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([2, 4, 6, 8]))
 def test_every_code_is_ladder_representable(seed, bits):
     """Regression: the clip used to admit ``-(qmax+1)`` (two's-complement
     extreme), whose magnitude needs a ``bits``-th magnitude bit the
@@ -56,9 +72,9 @@ def test_every_code_is_ladder_representable(seed, bits):
     q = np.asarray(qt.q, dtype=np.int64)
     qmax = 2 ** (bits - 1) - 1
     assert q.min() >= -qmax and q.max() <= qmax
-    # ladder fraction * 2^bits recovers the code bit for bit
+    # ladder fraction * 2^{bits-1} recovers the code bit for bit
     recon = np.round(np.asarray(c2c_ladder_value(qt.q, bits=bits),
-                                dtype=np.float64) * 2.0 ** bits)
+                                dtype=np.float64) * 2.0 ** (bits - 1))
     np.testing.assert_array_equal(recon.astype(np.int64), q)
 
 
